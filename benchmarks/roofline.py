@@ -1,0 +1,71 @@
+"""Roofline benchmark: aggregate the dry-run JSONs into the §Roofline table.
+
+Reads experiments/dryrun/*.json (produced by repro.launch.dryrun) and emits
+one CSV row per (arch, shape, mesh) plus a markdown table for EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import csv_row
+
+
+def load_records(dirname: str = "experiments/dryrun"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def markdown_table(recs) -> str:
+    hdr = ("| arch | shape | mesh | status | t_comp (s) | t_mem (s) | "
+           "t_coll (s) | bottleneck | useful FLOPs | fits HBM |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in recs:
+        if r.get("roofline"):
+            t = r["roofline"]
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['status']} "
+                f"| {t['t_compute_s']:.3f} | {t['t_memory_s']:.3f} "
+                f"| {t['t_collective_s']:.3f} | {t['bottleneck']} "
+                f"| {t['useful_flops_fraction']:.1%} | {r['fits_hbm']} |")
+        else:
+            reason = r.get("reason", r.get("error", ""))[:60]
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['status']} "
+                f"| - | - | - | - | - | {reason} |")
+    return hdr + "\n".join(lines)
+
+
+def main(fast: bool = True, out_json: str | None = None):
+    recs = load_records()
+    rows = []
+    for r in recs:
+        if r.get("roofline"):
+            t = r["roofline"]
+            rows.append(csv_row(
+                f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+                max(t["t_compute_s"], t["t_memory_s"],
+                    t["t_collective_s"]) * 1e6,
+                f"bottleneck={t['bottleneck']};"
+                f"useful={t['useful_flops_fraction']:.3f};"
+                f"fits={r['fits_hbm']}"))
+        else:
+            rows.append(csv_row(
+                f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}", 0.0,
+                f"status={r['status']}"))
+    if not rows:
+        rows.append(csv_row("roofline_no_dryruns_found", 0.0,
+                            "run repro.launch.dryrun --all first"))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(row)
+    print()
+    print(markdown_table(load_records()))

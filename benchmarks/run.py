@@ -1,0 +1,65 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. ``--full`` uses the paper-scale
+dataset sizes (slower); the default FAST mode uses statistically matched
+reduced sizes so the whole suite runs on one CPU core in minutes.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only fig2,fig6]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks import (  # noqa: E402
+    fig2_efficiency,
+    fig3_tau_sweep,
+    fig4_resource_tradeoff,
+    fig5_privacy_tradeoff,
+    fig6_optimal_tau,
+    roofline,
+)
+
+SUITES = {
+    "fig2": fig2_efficiency.main,
+    "fig3": fig3_tau_sweep.main,
+    "fig4": fig4_resource_tradeoff.main,
+    "fig5": fig5_privacy_tradeoff.main,
+    "fig6": fig6_optimal_tau.main,
+    "roofline": roofline.main,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset, e.g. fig2,fig6")
+    ap.add_argument("--out-dir", default="experiments/bench")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    names = (args.only.split(",") if args.only else list(SUITES))
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in names:
+        try:
+            rows = SUITES[name](
+                fast=not args.full,
+                out_json=os.path.join(args.out_dir, f"{name}.json"))
+            for r in rows:
+                print(r, flush=True)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{name},0,ERROR", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

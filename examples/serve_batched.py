@@ -1,0 +1,35 @@
+"""Batched serving example: prefill a batch of prompts on a reduced
+zamba2-family (Mamba2 + shared attention) model and decode with the cached
+state — exercises the hybrid KV/SSM cache path.
+
+Run:  PYTHONPATH=src python examples/serve_batched.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch, smoke_variant
+from repro.launch.serve import generate
+from repro.models.transformer import Transformer
+
+for arch in ("zamba2-7b", "rwkv6-1.6b", "gemma3-4b"):
+    cfg = smoke_variant(get_arch(arch))
+    model = Transformer(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab, size=(4, 24)), jnp.int32)
+    prefix = None
+    if cfg.prefix_len:
+        prefix = jnp.asarray(rng.standard_normal((4, cfg.prefix_len,
+                                                  cfg.d_model)),
+                             jnp.float32) * 0.02
+    t0 = time.time()
+    out = generate(model, params, prompts, gen_tokens=12, prefix=prefix,
+                   temperature=0.8)
+    dt = time.time() - t0
+    assert out.shape == (4, 12)
+    assert np.isfinite(np.asarray(out, np.float64)).all()
+    print(f"{arch:>14}: generated {out.shape} in {dt:.1f}s; "
+          f"sample={np.asarray(out[0, :6]).tolist()}")

@@ -1,0 +1,76 @@
+"""End-to-end driver: federated DP-PASGD training of a ~100M-param
+transformer on the synthetic non-iid token task for a few hundred steps.
+
+This is the paper's algorithm at language-model scale: C clients each take
+tau local noisy-SGD steps on their own token distribution, then average.
+Default config (~110M params: gemma3-family, 6 layers, d=768) trains a few
+hundred iterations in roughly an hour on this CPU container; pass --tiny for
+a 2-minute sanity run. On a TPU pod the same driver + launch/dryrun.py
+shardings run the full assigned configs.
+
+Run:  PYTHONPATH=src python examples/train_fl_transformer.py --tiny
+"""
+import argparse
+import time
+from dataclasses import replace
+
+import numpy as np
+
+from repro.configs import get_arch
+from repro.configs.base import LayerSpec, Segment
+from repro.core.fl import Budgets
+from repro.core.privacy import sigma_star
+from repro.launch.train import build_federation
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--tiny", action="store_true")
+ap.add_argument("--rounds", type=int, default=0)
+args = ap.parse_args()
+
+base = get_arch("gemma3-4b")
+if args.tiny:
+    cfg = replace(
+        base, name="gemma3-tiny", d_model=128, n_heads=4, n_kv_heads=2,
+        head_dim=32, d_ff=512, vocab=2048, n_layers=6, window=64,
+        segments=(Segment(1, (LayerSpec(attn_kind="swa"),) * 5
+                          + (LayerSpec(attn_kind="full"),)),),
+        loss_chunk=0, block_q=64, dtype="float32", remat=False)
+    rounds = args.rounds or 8
+    batch, seq, tau = 8, 64, 4
+else:
+    # ~110M params: 6-layer gemma3-family stack, d=768, 32k vocab
+    cfg = replace(
+        base, name="gemma3-110m", d_model=768, n_heads=12, n_kv_heads=4,
+        head_dim=64, d_ff=3072, vocab=32768, n_layers=6, window=256,
+        segments=(Segment(1, (LayerSpec(attn_kind="swa"),) * 5
+                          + (LayerSpec(attn_kind="full"),)),),
+        loss_chunk=0, block_q=128, dtype="float32", remat=False)
+    rounds = args.rounds or 50
+    batch, seq, tau = 8, 256, 8
+
+DELTA, C = 1e-5, 4
+K = rounds * tau
+if args.tiny:
+    # At toy scale, per-coordinate DP noise at a practical eps swamps the
+    # signal (exactly the paper's accuracy-privacy trade-off); the tiny demo
+    # uses a weak privacy level and reports the eps it actually spends.
+    CLIP, sigma, EPS = 20.0, 0.1, float("inf")
+else:
+    CLIP, EPS = 1.0, 8.0
+    sigma = sigma_star(K, CLIP, batch, EPS, DELTA)
+print(f"arch={cfg.name} clients={C} tau={tau} rounds={rounds} "
+      f"sigma={sigma:.4f} (eps budget={EPS})")
+
+fed = build_federation(cfg, n_clients=C, tau=tau, batch_size=batch,
+                       seq_len=seq, sigmas=[sigma] * C, lr=0.05,
+                       clip_norm=CLIP)
+n_params = sum(x.size for x in __import__("jax").tree.leaves(fed.params)) // C
+print(f"params/client: {n_params/1e6:.1f}M")
+
+t0 = time.time()
+out = fed.train(Budgets(c_th=float("inf"), eps_th=EPS), max_rounds=rounds)
+losses = [h["loss"] for h in out["history"]]
+print(f"iterations={out['rounds'] * tau}  loss {losses[0]:.3f} -> "
+      f"best {min(losses):.3f}  eps spent={out['max_epsilon']:.3f}  "
+      f"wall={time.time()-t0:.0f}s")
+assert min(losses) < losses[0], "DP-PASGD should reduce training loss"

@@ -1,0 +1,45 @@
+"""Recompute n_params / MODEL_FLOPS / useful%% for existing dry-run JSONs.
+
+The original sweep computed param counts with jnp.prod (int32 overflow for
+multi-billion-param archs). The HLO-derived terms are unaffected; only the
+analytic MODEL_FLOPS needed fixing, which we can do without recompiling.
+"""
+import glob
+import json
+import math
+import sys
+
+sys.path.insert(0, "src")
+import jax  # noqa: E402
+
+from repro.configs import get_arch  # noqa: E402
+from repro.models.transformer import Transformer  # noqa: E402
+from repro.utils.roofline import active_params, model_flops_estimate  # noqa: E402
+
+counts = {}
+for f in sorted(glob.glob("experiments/dryrun/*.json")):
+    d = json.load(open(f))
+    if d["status"] != "compiled":
+        continue
+    arch = d["arch"]
+    if arch not in counts:
+        cfg = get_arch(arch)
+        params = jax.eval_shape(Transformer(cfg).init, jax.random.PRNGKey(0))
+        counts[arch] = sum(math.prod(x.shape) if x.shape else 1
+                           for x in jax.tree.leaves(params))
+    n = counts[arch]
+    cfg = get_arch(arch)
+    n_active = active_params(cfg, float(n))
+    kind = d["kind"]
+    mf = model_flops_estimate(n_active, d["tokens_per_step"], kind)
+    r = d["roofline"]
+    total_hlo = r["flops_per_device"] * r["chips"]
+    old = (d["n_params"], r["useful_flops_fraction"])
+    d["n_params"] = n
+    d["active_params"] = n_active
+    r["model_flops"] = mf
+    r["useful_flops_fraction"] = mf / total_hlo if total_hlo else 0.0
+    json.dump(d, open(f, "w"), indent=2)
+    if abs(old[1] - r["useful_flops_fraction"]) > 1e-6:
+        print(f"{f}: params {old[0]/1e9:.2f}B -> {n/1e9:.2f}B, "
+              f"useful {old[1]:.3f} -> {r['useful_flops_fraction']:.3f}")

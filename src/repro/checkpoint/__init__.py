@@ -1,0 +1,9 @@
+from repro.checkpoint.checkpoint import (
+    load_checkpoint,
+    load_federation_state,
+    save_checkpoint,
+    save_federation_state,
+)
+
+__all__ = ["load_checkpoint", "load_federation_state", "save_checkpoint",
+           "save_federation_state"]

@@ -1,0 +1,81 @@
+"""The four assigned input shapes + input_specs() stand-ins for dry-runs.
+
+Decode shapes lower ``serve_step`` (one new token, KV cache of seq_len);
+train_4k lowers the DP-PASGD ``train_step`` (round of tau local steps);
+prefill_32k lowers ``prefill``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                   # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def get_shape(name: str) -> InputShape:
+    return SHAPES[name]
+
+
+def needs_subquadratic(shape: InputShape) -> bool:
+    return shape.name == "long_500k"
+
+
+def supports_shape(cfg: ArchConfig, shape: InputShape) -> tuple[bool, str]:
+    """long_500k only runs on sub-quadratic decode paths (DESIGN.md §4)."""
+    if needs_subquadratic(shape) and not cfg.subquadratic:
+        return False, ("skip: pure full-attention arch has no sub-quadratic "
+                       "path for 500k decode (DESIGN.md §4)")
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape, n_clients: int = 1,
+                tau: int = 1, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+    train:   {"tokens": (C, tau, B/C, S), "labels": ..., ["prefix": ...]}
+    prefill: {"tokens": (B, S), ["prefix": (B, P, d)]}
+    decode:  {"tokens": (B,), "pos": ()} (+ caches built separately)
+    """
+    s, b = shape.seq_len, shape.global_batch
+    if shape.kind == "train":
+        assert b % n_clients == 0, (b, n_clients)
+        bc = b // n_clients
+        batch = {
+            "tokens": _sds((n_clients, tau, bc, s), jnp.int32),
+            "labels": _sds((n_clients, tau, bc, s), jnp.int32),
+        }
+        if cfg.prefix_len:
+            batch["prefix"] = _sds((n_clients, tau, bc, cfg.prefix_len,
+                                    cfg.d_model), dtype)
+        return batch
+    if shape.kind == "prefill":
+        batch = {"tokens": _sds((b, s), jnp.int32)}
+        if cfg.prefix_len:
+            batch["prefix"] = _sds((b, cfg.prefix_len, cfg.d_model), dtype)
+        return batch
+    if shape.kind == "decode":
+        return {"tokens": _sds((b,), jnp.int32),
+                "pos": _sds((), jnp.int32)}
+    raise ValueError(shape.kind)

@@ -1,0 +1,28 @@
+from repro.core.clipping import clip_tree, make_dp_grad_fn, make_plain_grad_fn
+from repro.core.convergence import ProblemConstants, bound_b, theorem1_bound
+from repro.core.design import (
+    DesignProblem,
+    DesignSolution,
+    ResourceModel,
+    grid_search_reference,
+)
+from repro.core.fl import Budgets, Federation, FLConfig, design_sigmas, make_round_step
+from repro.core.privacy import (
+    PrivacyAccountant,
+    compose_zcdp,
+    epsilon_after_k,
+    gaussian_zcdp,
+    grad_sensitivity,
+    privacy_z,
+    sigma_star,
+    zcdp_to_dp,
+)
+
+__all__ = [
+    "clip_tree", "make_dp_grad_fn", "make_plain_grad_fn",
+    "ProblemConstants", "bound_b", "theorem1_bound",
+    "DesignProblem", "DesignSolution", "ResourceModel", "grid_search_reference",
+    "Budgets", "Federation", "FLConfig", "design_sigmas", "make_round_step",
+    "PrivacyAccountant", "compose_zcdp", "epsilon_after_k", "gaussian_zcdp",
+    "grad_sensitivity", "privacy_z", "sigma_star", "zcdp_to_dp",
+]

@@ -1,0 +1,82 @@
+"""shard_map DP-PASGD round: explicit collective schedule (Eq. 7a-7b).
+
+The GSPMD engine in core/fl.py lets the partitioner place the round-boundary
+all-reduce. This variant instead expresses the schedule explicitly with
+``jax.shard_map``: each mesh slot along the ``client`` axis owns its replica,
+runs tau local noisy-SGD steps with ZERO collectives, then one
+``jax.lax.pmean`` over the client axis is the aggregation — byte-for-byte
+the paper's protocol, and the single point where cross-client traffic can
+exist. Used for the paper-scale (replicated-model) experiments and as the
+reference collective schedule for the GSPMD lowering.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.clipping import make_dp_grad_fn, make_plain_grad_fn
+from repro.core.fl import FLConfig
+from repro.optim.optimizers import Optimizer
+from repro.utils.tree import tree_add
+
+
+def make_shard_map_round(loss_fn: Callable, optimizer: Optimizer,
+                         cfg: FLConfig, mesh: Mesh,
+                         client_axis: str = "client"):
+    """Build round_step(params, opt_state, batch, key, sigmas) on ``mesh``.
+
+    params/opt_state carry a leading client axis sharded over ``client_axis``
+    (local view inside the shard_map has leading dim 1). batch leaves are
+    (C, tau, B, ...); sigmas is (C,).
+    """
+    if cfg.dp:
+        grad_fn = make_dp_grad_fn(loss_fn, cfg.clip_norm,
+                                  cfg.num_microbatches,
+                                  cfg.vmap_microbatches, cfg.grad_accumulate)
+    else:
+        grad_fn = make_plain_grad_fn(loss_fn)
+
+    def per_client(params, opt_state, batches, keys, sigma):
+        """Local view: leading axis 1 (this client's shard)."""
+        squeeze = lambda t: jax.tree.map(lambda x: x[0], t)
+        params, opt_state = squeeze(params), squeeze(opt_state)
+        batches, sigma = squeeze(batches), sigma[0]
+        step_keys = jax.random.split(keys[0], cfg.tau)
+
+        def step(carry, inp):
+            p, s = carry
+            mb, k = inp
+            g, metrics = grad_fn(p, mb, k, sigma)
+            upd, s = optimizer.update(g, s, p)
+            return (tree_add(p, upd), s), metrics
+
+        (params, opt_state), ms = jax.lax.scan(step, (params, opt_state),
+                                               (batches, step_keys))
+        # ---- Eq. (7b): THE collective — one pmean over the client axis ----
+        params = jax.tree.map(
+            lambda x: jax.lax.pmean(x, axis_name=client_axis), params)
+        if cfg.average_opt_state:
+            opt_state = jax.tree.map(
+                lambda x: jax.lax.pmean(x.astype(jnp.float32),
+                                        axis_name=client_axis
+                                        ).astype(x.dtype), opt_state)
+        ms = jax.tree.map(lambda x: jax.lax.pmean(jnp.mean(x), client_axis),
+                          ms)
+        unsq = lambda t: jax.tree.map(lambda x: x[None], t)
+        return unsq(params), unsq(opt_state), ms
+
+    cspec = P(client_axis)
+    smapped = jax.shard_map(
+        per_client, mesh=mesh,
+        in_specs=(cspec, cspec, cspec, cspec, cspec),
+        out_specs=(cspec, cspec, P()),
+        check_vma=False)
+
+    def round_step(params, opt_state, batch, key, sigmas):
+        keys = jax.random.split(key, cfg.n_clients)
+        return smapped(params, opt_state, batch, keys, sigmas)
+
+    return round_step

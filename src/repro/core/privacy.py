@@ -1,0 +1,137 @@
+"""zCDP privacy accounting for DP-PASGD (paper §3, §5.2).
+
+Implements:
+  - Lemma 1: zCDP composition (rho adds).
+  - Lemma 2: Gaussian mechanism satisfies (Delta^2 / 2 sigma^2)-zCDP.
+  - Lemma 3: rho-zCDP  =>  (rho + 2 sqrt(rho log(1/delta)), delta)-DP.
+  - Eq. (9): closed-form overall privacy loss of device m after K iterations:
+        eps_m = 2 K G^2 / (X_m^2 sigma_m^2)
+              + (2 G / (X_m sigma_m)) sqrt(2 K log(1/delta)).
+  - Eq. (23): closed-form optimal (privacy-budget-binding) noise variance:
+        (sigma_m*)^2 = 2 K G^2 / (X_m^2 * Z),
+        Z = eps_th + 2 log(1/delta) + 2 sqrt(log(1/delta)^2 + eps_th log(1/delta)).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+
+def gaussian_zcdp(sensitivity: float, sigma: float) -> float:
+    """Lemma 2: rho of one Gaussian-mechanism release."""
+    if sigma <= 0:
+        return math.inf
+    return sensitivity ** 2 / (2.0 * sigma ** 2)
+
+
+def compose_zcdp(*rhos: float) -> float:
+    """Lemma 1: composition adds rho."""
+    return float(sum(rhos))
+
+
+def zcdp_to_dp(rho: float, delta: float) -> float:
+    """Lemma 3: convert rho-zCDP to (eps, delta)-DP."""
+    if rho == math.inf:
+        return math.inf
+    return rho + 2.0 * math.sqrt(rho * math.log(1.0 / delta))
+
+
+def grad_sensitivity(clip_norm: float, batch_size: int) -> float:
+    """Paper §5.2: Delta_2(g) <= 2 G / X_m for a size-X_m mini-batch."""
+    return 2.0 * clip_norm / batch_size
+
+
+def epsilon_after_k(k: int, clip_norm: float, batch_size: int, sigma: float,
+                    delta: float) -> float:
+    """Eq. (9): overall (eps, delta)-DP loss of one device after k iterations."""
+    if sigma <= 0:
+        return math.inf
+    g, x = clip_norm, batch_size
+    rho = 2.0 * k * g * g / (x * x * sigma * sigma)  # Lemmas 1+2
+    return zcdp_to_dp(rho, delta)                    # == Eq. (9) expanded
+
+
+def privacy_z(eps_th: float, delta: float) -> float:
+    """Eq. (25): Z constant of the binding privacy constraint."""
+    ld = math.log(1.0 / delta)
+    return eps_th + 2.0 * ld + 2.0 * math.sqrt(ld * ld + eps_th * ld)
+
+
+def rho_budget(eps_th: float, delta: float) -> float:
+    """Largest rho whose Lemma-3 conversion stays within (eps_th, delta)-DP.
+
+    Inverting eps = rho + 2 sqrt(rho log(1/delta)) gives
+        sqrt(rho*) = sqrt(log(1/delta) + eps) - sqrt(log(1/delta))
+    and one can check rho* = eps_th^2 / Z with Z from Eq. (25).
+    """
+    ld = math.log(1.0 / delta)
+    return (math.sqrt(ld + eps_th) - math.sqrt(ld)) ** 2
+
+
+def sigma_star(k: int, clip_norm: float, batch_size: int, eps_th: float,
+               delta: float) -> float:
+    """Eq. (23) corrected: smallest per-step noise std meeting eps_th at K=k.
+
+    NOTE (paper erratum): Eq. (23) as printed reads
+        (sigma*)^2 = 2 K G^2 / (X^2 Z),
+    but substituting it back into Eq. (9) does NOT give eps_th. The correct
+    inversion of Eq. (9) is rho* = eps_th^2 / Z, hence
+        (sigma*)^2 = 2 K G^2 Z / (X^2 eps_th^2)   ==  2 K G^2 / (X^2 rho*).
+    Verified by the property test eps(sigma*(K)) == eps_th (tests/test_privacy).
+    """
+    rho = rho_budget(eps_th, delta)  # == eps_th^2 / privacy_z(eps_th, delta)
+    var = 2.0 * k * clip_norm ** 2 / (batch_size ** 2 * rho)
+    return math.sqrt(var)
+
+
+@dataclass
+class PrivacyAccountant:
+    """Tracks per-client zCDP over the run; one instance per federation.
+
+    Each DP-PASGD iteration queries every client's dataset once (the gradient),
+    so every local step adds gaussian_zcdp(2G/X_m, sigma_m) to client m.
+    """
+    clip_norm: float
+    delta: float
+    batch_sizes: dict[int, int] = field(default_factory=dict)   # client -> X_m
+    sigmas: dict[int, float] = field(default_factory=dict)      # client -> sigma_m
+    _rho: dict[int, float] = field(default_factory=dict)
+    steps: int = 0
+
+    def register_client(self, client: int, batch_size: int, sigma: float) -> None:
+        if batch_size <= 0:
+            raise ValueError(f"batch_size must be positive, got {batch_size}")
+        if sigma < 0:
+            raise ValueError(f"sigma must be non-negative, got {sigma}")
+        self.batch_sizes[client] = batch_size
+        self.sigmas[client] = sigma
+        self._rho.setdefault(client, 0.0)
+
+    def step(self, n_steps: int = 1) -> None:
+        """Account for n_steps local iterations on every registered client."""
+        if n_steps < 0:
+            raise ValueError("n_steps must be >= 0")
+        for m, x in self.batch_sizes.items():
+            sens = grad_sensitivity(self.clip_norm, x)
+            self._rho[m] += n_steps * gaussian_zcdp(sens, self.sigmas[m])
+        self.steps += n_steps
+
+    def rho(self, client: int) -> float:
+        return self._rho.get(client, 0.0)
+
+    def epsilon(self, client: int) -> float:
+        return zcdp_to_dp(self.rho(client), self.delta)
+
+    def max_epsilon(self) -> float:
+        if not self._rho:
+            return 0.0
+        return max(self.epsilon(m) for m in self._rho)
+
+    def remaining_steps(self, client: int, eps_th: float) -> int:
+        """How many more local steps client m can take before exceeding eps_th."""
+        x, s = self.batch_sizes[client], self.sigmas[client]
+        if s == 0:
+            return 0
+        rho_step = gaussian_zcdp(grad_sensitivity(self.clip_norm, x), s)
+        left = rho_budget(eps_th, self.delta) - self._rho[client]
+        return max(0, int(left / rho_step))

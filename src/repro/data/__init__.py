@@ -1,0 +1,13 @@
+from repro.data.federated import (
+    ClientData,
+    FederatedData,
+    split_by_group,
+    split_dirichlet,
+    split_iid,
+)
+from repro.data.synthetic import Dataset, adult_like, vehicle_like
+
+__all__ = [
+    "ClientData", "FederatedData", "split_by_group", "split_dirichlet",
+    "split_iid", "Dataset", "adult_like", "vehicle_like",
+]

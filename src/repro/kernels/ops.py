@@ -1,0 +1,58 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True unless running on a real TPU backend, so the
+same call sites work in this CPU container (kernel body executed in Python)
+and on the target hardware (Mosaic-compiled).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dp_clip_noise import dp_clip_noise as _dp_clip_noise
+from repro.kernels.flash_attention import flash_attention as _flash_attention
+from repro.kernels.mamba2_ssd import mamba2_ssd as _mamba2_ssd
+from repro.kernels.rwkv6_scan import rwkv6_scan as _rwkv6_scan
+from repro.utils.tree import tree_split_keys
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def dp_clip_noise_flat(g, noise, clip_norm, sigma, block: int = 64 * 1024):
+    return _dp_clip_noise(g, noise, clip_norm, sigma, block=block,
+                          interpret=_interpret())
+
+
+def dp_clip_noise_tree(grads, key, clip_norm, sigma, block: int = 64 * 1024):
+    """Tree-level fused clip+noise: flatten -> kernel -> unflatten.
+    Drop-in replacement for core.clipping clip_tree + tree_add_noise."""
+    leaves, treedef = jax.tree.flatten(grads)
+    sizes = [x.size for x in leaves]
+    flat = jnp.concatenate([x.reshape(-1).astype(jnp.float32)
+                            for x in leaves])
+    noise = jax.random.normal(key, flat.shape, jnp.float32)
+    out, norm = dp_clip_noise_flat(flat, noise, clip_norm, sigma, block)
+    news = []
+    off = 0
+    for x, n in zip(leaves, sizes):
+        news.append(out[off:off + n].reshape(x.shape).astype(x.dtype))
+        off += n
+    return jax.tree.unflatten(treedef, news), norm
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128):
+    return _flash_attention(q, k, v, causal=causal, window=window,
+                            block_q=block_q, block_k=block_k,
+                            interpret=_interpret())
+
+
+def rwkv6_scan(r, k, v, w, u, s0=None):
+    return _rwkv6_scan(r, k, v, w, u, s0, interpret=_interpret())
+
+
+def mamba2_ssd(x, dt, a, b_in, c_in, *, chunk: int = 128):
+    return _mamba2_ssd(x, dt, a, b_in, c_in, chunk=chunk,
+                       interpret=_interpret())

@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dp_clip_noise_ref(g, noise, clip_norm, sigma):
+    """y = g * min(1, C/||g||_2) + sigma * noise ; returns (y, norm)."""
+    norm = jnp.sqrt(jnp.sum(jnp.square(g.astype(jnp.float32))))
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(norm, 1e-12))
+    y = (g.astype(jnp.float32) * scale
+         + sigma * noise.astype(jnp.float32)).astype(g.dtype)
+    return y, norm
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q/k/v (B, H, S, hd) same head count (GQA expanded by caller)."""
+    s = q.shape[2]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs.astype(v.dtype), v)
+
+
+def rwkv6_scan_ref(r, k, v, w, u, s0=None):
+    """r/k/v/w (B, H, S, hd); u (H, hd). Returns (y, final state)."""
+    b, h, s, hd = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+
+    def step(state, t):
+        rt, kt, vt, wt = (x[:, :, t].astype(jnp.float32)
+                          for x in (r, k, v, w))
+        kv = kt[..., :, None] * vt[..., None, :]
+        y = jnp.einsum("bhi,bhij->bhj",
+                       rt, state + u[None, :, :, None] * kv)
+        return state * wt[..., None] + kv, y
+
+    state, ys = jax.lax.scan(step, s0, jnp.arange(s))
+    return jnp.moveaxis(ys, 0, 2), state
+
+
+def mamba2_ssd_ref(x, dt, a, b_in, c_in, h0=None):
+    """Sequential SSD oracle. x (B,S,H,P), dt (B,S,H), a (H,), b/c (B,S,N).
+    Returns (y (B,S,H,P), final state (B,H,P,N))."""
+    bsz, s, h, p = x.shape
+    n = b_in.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def step(state, t):
+        xt = x[:, t].astype(jnp.float32)              # (B,H,P)
+        dtt = dt[:, t].astype(jnp.float32)            # (B,H)
+        bt = b_in[:, t].astype(jnp.float32)           # (B,N)
+        ct = c_in[:, t].astype(jnp.float32)
+        decay = jnp.exp(dtt * a[None, :])
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dtt, xt, bt)
+        new = state * decay[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", new, ct)
+        return new, y
+
+    state, ys = jax.lax.scan(step, h0, jnp.arange(s))
+    return jnp.moveaxis(ys, 0, 1), state

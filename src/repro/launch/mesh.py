@@ -1,0 +1,56 @@
+"""Production meshes + the derived federated / serving views.
+
+``make_production_mesh`` is the prescribed entry point (single-pod 16x16
+"data" x "model"; multi-pod 2x16x16 with a leading "pod" axis). DP-PASGD
+derives a ("client", "replica", "model") view of the SAME devices: the
+client axis groups contiguous slabs (one divergent model replica each —
+the federated clients), "replica" is within-client data parallel (also the
+FSDP shard axis), "model" is tensor parallel. Serving derives a flat
+("data", "model") view.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_federated_mesh(mesh: Mesh, n_clients: int) -> Mesh:
+    """("client", "replica", "model") view over the production mesh devices.
+
+    The model axis is preserved (last mesh dim); the pod x data axes are
+    re-grouped into client x replica. Clients are contiguous slabs, so in the
+    multi-pod mesh client boundaries align with pod boundaries whenever
+    n_clients >= n_pods — the round-boundary all-reduce is then the only
+    cross-pod collective, which is the paper's communication pattern.
+    """
+    devices = mesh.devices
+    model = devices.shape[-1]
+    total = devices.size // model
+    if total % n_clients:
+        raise ValueError(f"{n_clients} clients do not divide {total} "
+                         "data-parallel slots")
+    replica = total // n_clients
+    return Mesh(devices.reshape(n_clients, replica, model),
+                ("client", "replica", "model"))
+
+
+def make_serving_mesh(mesh: Mesh) -> Mesh:
+    """("data", "model") view (pod axis folded into data)."""
+    devices = mesh.devices
+    model = devices.shape[-1]
+    return Mesh(devices.reshape(-1, model), ("data", "model"))
+
+
+def default_n_clients(mesh: Mesh, requested: int | None = None) -> int:
+    """Default federation size: 4 clients per pod (=> 4-way FSDP within each
+    client on a 16x16 pod), doubling with the pod count."""
+    if requested:
+        return requested
+    n_pods = mesh.devices.shape[0] if mesh.devices.ndim == 3 else 1
+    return 4 * n_pods

@@ -1,0 +1,115 @@
+"""End-to-end DP-PASGD training launcher.
+
+Runs real training (allocates params) — use reduced/smoke configs or the
+~100M example config on CPU; on a TPU pod the same driver runs the full
+configs. The optimal-design solver (paper §7) can pick (K, tau, sigma) from
+resource/privacy budgets before launch.
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma3-4b --smoke \
+        --rounds 5 --clients 4 --tau 5 --eps 10 --cth 2000
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch, smoke_variant
+from repro.core.convergence import ProblemConstants
+from repro.core.design import DesignProblem, ResourceModel
+from repro.core.fl import Budgets, Federation, FLConfig, design_sigmas
+from repro.data.tokens import FederatedTokenStream, TokenTaskConfig
+from repro.models.transformer import Transformer
+from repro.optim import sgd
+from repro.checkpoint import save_federation_state
+
+
+def build_federation(cfg, n_clients: int, tau: int, batch_size: int,
+                     seq_len: int, sigmas, lr: float = 0.1,
+                     clip_norm: float = 1.0, seed: int = 0) -> Federation:
+    model = Transformer(cfg)
+    task = TokenTaskConfig(vocab=cfg.vocab, seq_len=seq_len,
+                           n_clients=n_clients, seed=seed)
+    stream = FederatedTokenStream(task, batch_size,
+                                  prefix_len=cfg.prefix_len,
+                                  d_model=cfg.d_model)
+    params0 = model.init(jax.random.PRNGKey(seed))
+    flcfg = FLConfig(n_clients=n_clients, tau=tau, clip_norm=clip_norm,
+                     dp=True, num_microbatches=1)
+    fed = Federation(
+        cfg=flcfg, loss_fn=model.loss_fn, optimizer=sgd(lr),
+        params0=params0, sampler=stream.sampler,
+        sigmas=np.asarray(sigmas, np.float32),
+        batch_sizes=[batch_size] * n_clients, seed=seed)
+    fed.model = model
+    return fed
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke variant of the arch")
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--tau", type=int, default=0,
+                    help="0 = let the optimal-design solver choose")
+    ap.add_argument("--rounds", type=int, default=10)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=0.1)
+    ap.add_argument("--clip", type=float, default=1.0)
+    ap.add_argument("--eps", type=float, default=10.0)
+    ap.add_argument("--delta", type=float, default=1e-4)
+    ap.add_argument("--cth", type=float, default=2000.0)
+    ap.add_argument("--c1", type=float, default=100.0)
+    ap.add_argument("--c2", type=float, default=1.0)
+    ap.add_argument("--save", default=None)
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if args.smoke:
+        cfg = smoke_variant(cfg)
+
+    if args.tau:
+        tau, k = args.tau, args.rounds * args.tau
+        sigmas = design_sigmas(k, args.clip, [args.batch] * args.clients,
+                               args.eps, args.delta)
+    else:
+        # paper §7: solve for (K, tau, sigma) under the budgets
+        consts = ProblemConstants(eta=args.lr, lam=0.5, lip=2.0, alpha=5.0,
+                                  xi2=1.0, dim=1000, n_clients=args.clients)
+        prob = DesignProblem(
+            consts=consts, resource=ResourceModel(args.c1, args.c2),
+            clip_norm=args.clip, batch_sizes=[args.batch] * args.clients,
+            delta=args.delta, eps_th=args.eps, c_th=args.cth)
+        sol = prob.solve()
+        tau = sol.tau
+        sigmas = np.asarray(sol.sigmas, np.float32)
+        print(f"[design] K*={sol.k} tau*={tau} sigma*={sigmas[0]:.4f} "
+              f"bound={sol.predicted_bound:.4f} cost={sol.cost:.0f}")
+
+    fed = build_federation(cfg, args.clients, tau, args.batch, args.seq,
+                           sigmas, lr=args.lr, clip_norm=args.clip)
+    budgets = Budgets(c_th=args.cth, eps_th=args.eps, c1=args.c1, c2=args.c2)
+    t0 = time.time()
+    out = fed.train(budgets, max_rounds=args.rounds)
+    dt = time.time() - t0
+    print(json.dumps({
+        "arch": cfg.name, "rounds": out["rounds"],
+        "final_loss": out["history"][-1]["loss"] if out["history"] else None,
+        "max_epsilon": out["max_epsilon"],
+        "resource_spent": out["resource_spent"],
+        "wall_s": round(dt, 1),
+    }, indent=2))
+    if args.save:
+        save_federation_state(args.save, fed)
+        print(f"saved federation state to {args.save}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

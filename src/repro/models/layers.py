@@ -1,0 +1,134 @@
+"""Common transformer layers: RMSNorm, RoPE, SwiGLU MLP, embeddings.
+
+Every init_* returns (params, logical_axes) where logical_axes mirrors the
+param tree with tuples of logical axis names (see models/sharding.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.sharding import shard_hint
+
+
+def _dense_init(key, shape, in_axis: int = 0, dtype=jnp.float32):
+    fan_in = shape[in_axis]
+    scale = 1.0 / jnp.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}, {"scale": (None,)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding (computed on the fly from positions)
+# ---------------------------------------------------------------------------
+
+def rope_angles(positions, head_dim: int, theta: float):
+    """positions (...,) -> cos/sin (..., head_dim//2), float32."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x (..., S, H, hd); cos/sin (..., S, hd//2) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    x32_1, x32_2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate(
+        [x32_1 * c - x32_2 * s, x32_2 * c + x32_1 * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP (dense FFN used by every assigned arch)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = {
+        "w_gate": _dense_init(k1, (d_model, d_ff), 0, dtype),
+        "w_up": _dense_init(k2, (d_model, d_ff), 0, dtype),
+        "w_down": _dense_init(k3, (d_ff, d_model), 0, dtype),
+    }
+    axes = {
+        "w_gate": ("fsdp", "tp"),
+        "w_up": ("fsdp", "tp"),
+        "w_down": ("tp", "fsdp"),
+    }
+    return params, axes
+
+
+def mlp(params, x):
+    w_gate = shard_hint(params["w_gate"], "wg", "tp")
+    w_up = shard_hint(params["w_up"], "wg", "tp")
+    w_down = shard_hint(params["w_down"], "tp", "wg")
+    h = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    h = jax.nn.silu(h.astype(jnp.float32)).astype(x.dtype) * u
+    h = shard_hint(h, "batch", "seq", "tp")
+    return jnp.einsum("...f,fd->...d", h, w_down)
+
+
+# ---------------------------------------------------------------------------
+# Embedding + LM head
+# ---------------------------------------------------------------------------
+
+def init_embed(key, vocab: int, d_model: int, tie_head: bool = True,
+               dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    params = {"embedding": _dense_init(k1, (vocab, d_model), 1, dtype)}
+    axes = {"embedding": ("tp", "fsdp")}
+    if not tie_head:
+        params["head"] = _dense_init(k2, (d_model, vocab), 0, dtype)
+        axes["head"] = ("fsdp", "tp")
+    return params, axes
+
+
+def embed(params, tokens, impl: str = "gather"):
+    if impl == "one_hot":
+        # SPMD-friendly on TPU: the one-hot matmul contracts the sharded
+        # vocab dim locally + one reduce, instead of the gather's
+        # replicate-then-repartition pathology (§Perf optimization).
+        table = params["embedding"]
+        oh = jax.nn.one_hot(tokens, table.shape[0], dtype=table.dtype)
+        out = jnp.einsum("bsv,vd->bsd", oh, table)
+    else:
+        out = jnp.take(params["embedding"], tokens, axis=0)
+    return shard_hint(out, "batch", "seq", None)
+
+
+def unembed(params, x):
+    if "head" in params:
+        logits = jnp.einsum("...d,dv->...v", x, params["head"])
+    else:
+        logits = jnp.einsum("...d,vd->...v", x, params["embedding"])
+    return shard_hint(logits, "batch", "seq", "tp")
+
+
+def cross_entropy(logits, labels, ignore_id: int = -1):
+    """Mean token cross-entropy in fp32. labels (B, S) int32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, labels[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    nll = logz - gold
+    mask = (labels != ignore_id).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

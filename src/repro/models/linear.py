@@ -1,0 +1,64 @@
+"""The paper's convex models: logistic regression (Adult) and linear SVM
+(Vehicle), with the loss functions used in §8.1 (softmax cross-entropy and
+hinge loss). Both are G-Lipschitz on unit-ball data, matching §4."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def init_linear(dim: int, n_classes: int = 2, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": jnp.asarray(rng.normal(scale=0.01, size=(dim, n_classes)),
+                         jnp.float32),
+        "b": jnp.zeros((n_classes,), jnp.float32),
+    }
+
+
+def logits(params, x):
+    return x @ params["w"] + params["b"]
+
+
+def logreg_loss(params, batch, l2: float = 1e-4):
+    """Softmax cross-entropy (paper: Adult logistic regression)."""
+    z = logits(params, batch["x"])
+    logp = jax.nn.log_softmax(z, axis=-1)
+    y = batch["y"]
+    nll = -jnp.take_along_axis(logp, y[:, None].astype(jnp.int32), axis=-1)
+    reg = 0.5 * l2 * (jnp.sum(params["w"] ** 2))
+    return jnp.mean(nll) + reg
+
+
+def svm_loss(params, batch, l2: float = 1e-4):
+    """Binary hinge loss (paper: Vehicle linear SVM). Uses the margin of the
+    positive-class score minus negative-class score."""
+    z = logits(params, batch["x"])
+    margin = z[:, 1] - z[:, 0]
+    y_pm = 2.0 * batch["y"].astype(jnp.float32) - 1.0
+    hinge = jnp.maximum(0.0, 1.0 - y_pm * margin)
+    reg = 0.5 * l2 * (jnp.sum(params["w"] ** 2))
+    return jnp.mean(hinge) + reg
+
+
+def accuracy(params, x, y):
+    pred = jnp.argmax(logits(params, x), axis=-1)
+    return jnp.mean((pred == y).astype(jnp.float32))
+
+
+def make_eval_fn(loss_fn, x, y):
+    x = jnp.asarray(x)
+    y = jnp.asarray(y)
+
+    @jax.jit
+    def _eval(params):
+        return {
+            "eval_loss": loss_fn(params, {"x": x, "y": y}),
+            "eval_acc": accuracy(params, x, y),
+        }
+
+    def eval_fn(params):
+        return {k: float(v) for k, v in _eval(params).items()}
+
+    return eval_fn

@@ -1,0 +1,160 @@
+"""Mixture-of-Experts FFN (phi3.5-moe 16e top-2, llama4 128e top-1 + shared).
+
+Token-choice top-k routing with per-row capacity. Two dispatch
+implementations:
+
+  "scatter" (baseline): scatter-add tokens into per-expert buffers, batched
+      expert matmul, gather back. Memory O(E * capacity * d) — no (T, E, C)
+      dispatch tensor is ever materialized.
+  "dense" (GShard-style): one-hot dispatch einsum — simple, used as the
+      reference oracle in tests.
+
+Experts are sharded over the "tp" mesh axis (expert parallelism); GSPMD
+inserts the token all-to-all at the dispatch/combine boundaries.
+Aux losses: switch load-balance loss + router z-loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _dense_init, init_mlp, mlp
+from repro.models.sharding import shard_hint
+
+
+def init_moe(key, d_model: int, d_ff: int, n_experts: int, top_k: int,
+             shared_expert: bool = False, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    ex = jax.random.split(ks[0], 3)
+    params = {
+        "router": _dense_init(ks[1], (d_model, n_experts), 0, jnp.float32),
+        "w_gate": _dense_init(ex[0], (n_experts, d_model, d_ff), 1, dtype),
+        "w_up": _dense_init(ex[1], (n_experts, d_model, d_ff), 1, dtype),
+        "w_down": _dense_init(ex[2], (n_experts, d_ff, d_model), 1, dtype),
+    }
+    axes = {
+        "router": (None, None),
+        "w_gate": ("tp", "fsdp", None),
+        "w_up": ("tp", "fsdp", None),
+        "w_down": ("tp", None, "fsdp"),
+    }
+    if shared_expert:
+        sp, sa = init_mlp(ks[2], d_model, d_ff, dtype)
+        params["shared"] = sp
+        axes["shared"] = sa
+    return params, axes
+
+
+def _expert_ffn(params, xe):
+    """xe (E, C, d) -> (E, C, d), batched over experts."""
+    h = jnp.einsum("ecd,edf->ecf", xe, params["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", xe, params["w_up"])
+    h = jax.nn.silu(h.astype(jnp.float32)).astype(xe.dtype) * u
+    return jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+
+
+def _route(params, x, top_k: int):
+    """x (T, d) -> weights (T, K), ids (T, K), aux losses."""
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, ids = jax.lax.top_k(probs, top_k)
+    weights = weights / jnp.maximum(
+        jnp.sum(weights, axis=-1, keepdims=True), 1e-9)
+    # switch load-balance loss: E * sum_e f_e * p_e
+    e = params["router"].shape[1]
+    f = jnp.mean(jax.nn.one_hot(ids[:, 0], e), axis=0)
+    p = jnp.mean(probs, axis=0)
+    lb = e * jnp.sum(f * p)
+    z = jnp.mean(jnp.square(jax.scipy.special.logsumexp(logits, axis=-1)))
+    return weights, ids, lb + 1e-3 * z
+
+
+def capacity(tokens: int, n_experts: int, top_k: int, factor: float) -> int:
+    c = int(tokens * top_k * factor / n_experts)
+    return max(8, (c + 7) // 8 * 8)
+
+
+def _regroup(x):
+    """Dispatch groups: per batch row for long sequences; the whole batch as
+    one group for decode (S=1), where per-row capacity would pad each row's
+    single token to a full min-capacity expert buffer (128x waste)."""
+    bsz, s, d = x.shape
+    if s <= 8:
+        return x.reshape(1, bsz * s, d)
+    return x
+
+
+def moe_scatter(params, x, *, top_k: int, capacity_factor: float = 1.25):
+    """x (B, S, d) -> (y, aux). Scatter/gather dispatch, per group."""
+    orig_shape = x.shape
+    x = _regroup(x)
+    bsz, s, d = x.shape
+    e = params["router"].shape[1]
+    cap = capacity(s, e, top_k, capacity_factor)
+
+    def per_row(xr):                                     # xr (S, d)
+        weights, ids, aux = _route(params, xr, top_k)
+        flat_ids = ids.reshape(-1)                       # (S*K,)
+        flat_w = weights.reshape(-1)
+        # rank of each (token, k) within its expert, in token order
+        oh = jax.nn.one_hot(flat_ids, e, dtype=jnp.int32)     # (S*K, E)
+        ranks = jnp.cumsum(oh, axis=0) - oh
+        rank = jnp.sum(ranks * oh, axis=-1)              # (S*K,)
+        keep = rank < cap
+        slot = jnp.where(keep, flat_ids * cap + rank, e * cap)  # overflow slot
+        xr_rep = jnp.repeat(xr, top_k, axis=0)           # (S*K, d)
+        buf = jnp.zeros((e * cap + 1, d), xr.dtype)
+        buf = buf.at[slot].add(xr_rep)
+        ye = _expert_ffn(params, buf[:-1].reshape(e, cap, d))
+        y_tok = ye.reshape(e * cap, d)
+        y_tok = jnp.concatenate([y_tok, jnp.zeros((1, d), y_tok.dtype)])
+        gathered = y_tok[slot] * (flat_w * keep)[:, None].astype(y_tok.dtype)
+        y = jnp.sum(gathered.reshape(s, top_k, d), axis=1)
+        return y, aux
+
+    y, aux = jax.vmap(per_row)(x)
+    y = y.reshape(orig_shape)
+    x = x.reshape(orig_shape)
+    y = shard_hint(y, "batch", "seq", None)
+    if "shared" in params:
+        y = y + mlp(params["shared"], x)
+    return y, jnp.mean(aux)
+
+
+def moe_dense(params, x, *, top_k: int, capacity_factor: float = 1.25):
+    """Reference GShard-style dense-dispatch implementation (oracle)."""
+    orig_shape = x.shape
+    x = _regroup(x)
+    bsz, s, d = x.shape
+    e = params["router"].shape[1]
+    cap = capacity(s, e, top_k, capacity_factor)
+
+    def per_row(xr):
+        weights, ids, aux = _route(params, xr, top_k)
+        flat_ids = ids.reshape(-1)
+        flat_w = weights.reshape(-1)
+        oh = jax.nn.one_hot(flat_ids, e, dtype=jnp.int32)
+        ranks = jnp.cumsum(oh, axis=0) - oh
+        rank = jnp.sum(ranks * oh, axis=-1)
+        keep = rank < cap
+        disp = (jax.nn.one_hot(flat_ids, e)[..., None] *
+                jax.nn.one_hot(rank, cap)[..., None, :]) * keep[:, None, None]
+        xr_rep = jnp.repeat(xr, top_k, axis=0)           # (S*K, d)
+        xe = jnp.einsum("tec,td->ecd", disp, xr_rep)
+        ye = _expert_ffn(params, xe)
+        comb = disp * flat_w[:, None, None]
+        y = jnp.einsum("tec,ecd->td", comb, ye)
+        return jnp.sum(y.reshape(s, top_k, d), axis=1), aux
+
+    y, aux = jax.vmap(per_row)(x)
+    y = y.reshape(orig_shape)
+    x = x.reshape(orig_shape)
+    if "shared" in params:
+        y = y + mlp(params["shared"], x)
+    return y, jnp.mean(aux)
+
+
+def moe_apply(params, x, *, top_k: int, capacity_factor: float = 1.25,
+              impl: str = "scatter"):
+    fn = moe_scatter if impl == "scatter" else moe_dense
+    return fn(params, x, top_k=top_k, capacity_factor=capacity_factor)

@@ -1,0 +1,117 @@
+"""Logical-axis sharding helpers.
+
+Models annotate tensors with *logical* axis names; a context installs the
+active mesh plus a logical->mesh translation. Outside any context (CPU unit
+tests) every helper is the identity, so the same model code runs on one
+device and on the 512-chip production mesh.
+
+Logical names used across the model stack:
+  "client"  federated client axis (leading axis of FL-stacked params)
+  "fsdp"    fully-sharded param dim            -> mesh "replica" (train)
+                                                   or "data" (serve, optional)
+  "tp"      tensor-parallel param/activation dim -> mesh "model"
+  "batch"   data batch                          -> mesh "replica" / "data"
+  "seq"     sequence dim (sharded only for long-context decode caches)
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _current():
+    return getattr(_state, "ctx", None)
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Mesh, rules: dict[str, Any]):
+    """Install mesh + logical->mesh rules for model code in this thread."""
+    prev = _current()
+    _state.ctx = (mesh, dict(rules))
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def train_rules() -> dict[str, Any]:
+    return {"client": "client", "fsdp": "replica", "tp": "model",
+            "batch": "replica", "seq": None, "act": None,
+            # weight sharding at USE site; set to None to force a (loop-
+            # hoistable) weight all-gather instead of per-microbatch
+            # activation all-reduces (§Perf "gather_weights")
+            "wg": "replica"}
+
+
+def serve_rules(fsdp_over_data: bool = False, shard_seq: bool = False) -> dict[str, Any]:
+    return {"client": None, "fsdp": "data" if fsdp_over_data else None,
+            "tp": "model", "batch": "data",
+            "seq": "data" if shard_seq else None, "act": None,
+            # decode-cache dims; lower_decode overrides per config:
+            "kv_tp": "model", "cache_seq": "data" if shard_seq else None,
+            "wg": "data" if fsdp_over_data else None}
+
+
+def _mesh_axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def resolve_spec(logical: tuple, shape: tuple[int, ...] | None = None) -> P:
+    """Translate logical axis names to a PartitionSpec under active rules.
+
+    If ``shape`` is given, any mesh axis that does not divide the dim size is
+    dropped (GSPMD would pad; we prefer explicit replication)."""
+    ctx = _current()
+    if ctx is None:
+        return P()
+    mesh, rules = ctx
+    out = []
+    for i, name in enumerate(logical):
+        axis = rules.get(name) if name is not None else None
+        if axis is not None and shape is not None:
+            if shape[i] % _mesh_axis_size(mesh, axis) != 0:
+                axis = None
+        out.append(axis)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def shard_hint(x, *logical):
+    """with_sharding_constraint under the active rules (identity if none)."""
+    ctx = _current()
+    if ctx is None:
+        return x
+    mesh, _ = ctx
+    spec = resolve_spec(logical, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def spec_tree(logical_tree, shape_tree=None):
+    """Map a pytree of logical-axis tuples to PartitionSpecs."""
+    if shape_tree is None:
+        return jax.tree.map(lambda lg: resolve_spec(lg), logical_tree,
+                            is_leaf=lambda x: isinstance(x, tuple))
+    return jax.tree.map(
+        lambda lg, arr: resolve_spec(lg, arr.shape),
+        logical_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def named_sharding_tree(mesh: Mesh, logical_tree, shape_tree=None):
+    specs = spec_tree(logical_tree, shape_tree)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,530 @@
+"""Transformer assembly: segments of scanned layer patterns, with train,
+prefill, and decode paths. See configs/base.py for the segment machinery.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, LayerSpec
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    _dense_init,
+    cross_entropy,
+    embed,
+    init_embed,
+    init_mlp,
+    init_rmsnorm,
+    mlp,
+    rmsnorm,
+    unembed,
+)
+from repro.models.sharding import shard_hint
+
+AUX_WEIGHT = 0.01  # load-balance aux loss weight
+
+
+def _prepend_axis(axes_tree, name=None):
+    return jax.tree.map(lambda t: (name,) + t, axes_tree,
+                        is_leaf=lambda t: isinstance(t, tuple))
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+class Transformer:
+    """Functional model: params are explicit pytrees; methods are pure."""
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.has_shared = any(ls.mixer == "shared_attn"
+                              for ls in cfg.layer_specs())
+
+    # ------------------------------------------------------------------
+    # init
+    # ------------------------------------------------------------------
+
+    def _init_layer(self, spec: LayerSpec, key):
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        d = cfg.d_model
+        kmix, kffn = jax.random.split(key)
+        params: dict[str, Any] = {}
+        axes: dict[str, Any] = {}
+
+        params["norm1"], axes["norm1"] = init_rmsnorm(d, dt)
+        if spec.mixer == "attn":
+            params["mixer"], axes["mixer"] = attn.init_attention(
+                kmix, d, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim,
+                cfg.qkv_bias, dt)
+        elif spec.mixer == "mamba2":
+            params["mixer"], axes["mixer"] = ssm_mod.init_mamba2(
+                kmix, d, cfg.ssm_state, cfg.ssm_headdim, cfg.ssm_expand,
+                cfg.conv_kernel, dt)
+        elif spec.mixer == "rwkv6":
+            params["mixer"], axes["mixer"] = rwkv_mod.init_rwkv6_timemix(
+                kmix, d, cfg.rwkv_headdim, max(4, cfg.lora_rank or 32), dt)
+        elif spec.mixer == "shared_attn":
+            r = max(1, cfg.lora_rank)
+            hd = cfg.resolved_head_dim
+            ks = jax.random.split(kmix, 4)
+            params["mixer"] = {
+                "lora_q_a": _dense_init(ks[0], (d, r), 0, dt),
+                "lora_q_b": jnp.zeros((r, cfg.n_heads * hd), dt),
+                "lora_o_a": _dense_init(ks[1], (cfg.n_heads * hd, r), 0, dt),
+                "lora_o_b": jnp.zeros((r, d), dt),
+            }
+            axes["mixer"] = {
+                "lora_q_a": ("fsdp", None), "lora_q_b": (None, "tp"),
+                "lora_o_a": ("tp", None), "lora_o_b": (None, "fsdp"),
+            }
+        else:
+            raise ValueError(f"unknown mixer {spec.mixer}")
+
+        if spec.ffn != "none":
+            params["norm2"], axes["norm2"] = init_rmsnorm(d, dt)
+        if spec.ffn == "mlp":
+            params["ffn"], axes["ffn"] = init_mlp(kffn, d, cfg.d_ff, dt)
+        elif spec.ffn == "moe":
+            params["ffn"], axes["ffn"] = moe_mod.init_moe(
+                kffn, d, cfg.moe_d_ff or cfg.d_ff, cfg.n_experts, cfg.top_k,
+                cfg.shared_expert, dt)
+        elif spec.ffn == "rwkv_cm":
+            params["ffn"], axes["ffn"] = rwkv_mod.init_rwkv6_channelmix(
+                kffn, d, cfg.d_ff, dt)
+        elif spec.ffn in ("none", "shared_mlp"):
+            params["ffn"], axes["ffn"] = {}, {}
+        else:
+            raise ValueError(f"unknown ffn {spec.ffn}")
+        return params, axes
+
+    def _layer_axes(self, spec: LayerSpec):
+        """Logical axes of one layer, without materializing params."""
+        box = {}
+
+        def probe(k):
+            p, a = self._init_layer(spec, k)
+            box["axes"] = a
+            return p
+
+        jax.eval_shape(probe, jax.random.PRNGKey(0))
+        return box["axes"]
+
+    def init(self, key):
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        keys = jax.random.split(key, 3 + len(cfg.segments))
+        params: dict[str, Any] = {}
+        params["embed"], self._embed_axes = init_embed(
+            keys[0], cfg.vocab, cfg.d_model, cfg.tie_head, dt)
+        params["final_norm"], fn_axes = init_rmsnorm(cfg.d_model, dt)
+
+        seg_params = []
+        seg_axes = []
+        for si, seg in enumerate(cfg.segments):
+            layer_keys = jax.random.split(keys[2 + si],
+                                          seg.n_steps * len(seg.pattern))
+            layer_keys = layer_keys.reshape(seg.n_steps, len(seg.pattern), 2)
+            pat_p: dict[str, Any] = {}
+            pat_a: dict[str, Any] = {}
+            for j, ls in enumerate(seg.pattern):
+                stacked = jax.vmap(lambda k, ls=ls: self._init_layer(ls, k)[0]
+                                   )(layer_keys[:, j])
+                pat_p[str(j)] = stacked
+                pat_a[str(j)] = _prepend_axis(self._layer_axes(ls), None)
+            seg_params.append(pat_p)
+            seg_axes.append(pat_a)
+        params["segments"] = seg_params
+
+        if self.has_shared:
+            ks = jax.random.split(keys[1], 2)
+            sh_attn, sh_attn_ax = attn.init_attention(
+                ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                cfg.resolved_head_dim, cfg.qkv_bias, dt)
+            sh_mlp, sh_mlp_ax = init_mlp(ks[1], cfg.d_model, cfg.d_ff, dt)
+            params["shared"] = {"attn": sh_attn, "mlp": sh_mlp}
+            self._shared_axes = {"attn": sh_attn_ax, "mlp": sh_mlp_ax}
+
+        self._axes = {
+            "embed": self._embed_axes,
+            "final_norm": fn_axes,
+            "segments": seg_axes,
+        }
+        if self.has_shared:
+            self._axes["shared"] = self._shared_axes
+        return params
+
+    def param_axes(self):
+        """Logical-axis tree matching init() output (init must run first,
+        or call axes_only())."""
+        if not hasattr(self, "_axes"):
+            self.axes_only()
+        return self._axes
+
+    def axes_only(self):
+        """Build the logical-axes tree without materializing params."""
+        jax.eval_shape(self.init, jax.random.PRNGKey(0))
+        return self._axes
+
+    # ------------------------------------------------------------------
+    # layer application (full sequence)
+    # ------------------------------------------------------------------
+
+    def _merged_shared_attn(self, lora, shared):
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+        d = cfg.d_model
+        dq = (lora["lora_q_a"] @ lora["lora_q_b"]).reshape(d, cfg.n_heads, hd)
+        do = (lora["lora_o_a"] @ lora["lora_o_b"]).reshape(cfg.n_heads, hd, d)
+        p = dict(shared["attn"])
+        p["wq"] = p["wq"] + dq
+        p["wo"] = p["wo"] + do
+        return p
+
+    def _apply_mixer(self, spec: LayerSpec, lparams, shared, h, positions):
+        cfg = self.cfg
+        if spec.mixer == "attn":
+            return attn.attention_forward(
+                lparams["mixer"], h, positions, kind=spec.attn_kind,
+                window=cfg.window, chunk=cfg.chunk, use_rope=spec.use_rope,
+                rope_theta=cfg.rope_theta, block_q=cfg.block_q,
+                causal_buckets=cfg.causal_buckets)
+        if spec.mixer == "shared_attn":
+            p = self._merged_shared_attn(lparams["mixer"], shared)
+            return attn.attention_forward(
+                p, h, positions, kind=spec.attn_kind, window=cfg.window,
+                chunk=cfg.chunk, use_rope=spec.use_rope,
+                rope_theta=cfg.rope_theta, block_q=cfg.block_q,
+                causal_buckets=cfg.causal_buckets)
+        if spec.mixer == "mamba2":
+            return ssm_mod.mamba2_forward(
+                lparams["mixer"], h, d_state=cfg.ssm_state,
+                headdim=cfg.ssm_headdim, expand=cfg.ssm_expand,
+                chunk=cfg.ssd_chunk)
+        if spec.mixer == "rwkv6":
+            return rwkv_mod.rwkv6_timemix_forward(lparams["mixer"], h,
+                                                  cfg.rwkv_headdim,
+                                                  cfg.rwkv_chunk)
+        raise ValueError(spec.mixer)
+
+    def _apply_ffn(self, spec: LayerSpec, lparams, shared, h):
+        cfg = self.cfg
+        if spec.ffn == "mlp":
+            return mlp(lparams["ffn"], h), 0.0
+        if spec.ffn == "moe":
+            return moe_mod.moe_apply(
+                lparams["ffn"], h, top_k=cfg.top_k,
+                capacity_factor=cfg.capacity_factor, impl=cfg.moe_impl)
+        if spec.ffn == "rwkv_cm":
+            return rwkv_mod.rwkv6_channelmix_forward(lparams["ffn"], h), 0.0
+        if spec.ffn == "shared_mlp":
+            return mlp(shared["mlp"], h), 0.0
+        return None, 0.0
+
+    def _apply_layer(self, spec: LayerSpec, lparams, shared, x, positions):
+        aux = jnp.zeros((), jnp.float32)
+        h = rmsnorm(lparams["norm1"], x)
+        x = x + self._apply_mixer(spec, lparams, shared, h, positions)
+        if spec.ffn != "none":
+            h2 = rmsnorm(lparams["norm2"], x)
+            out, a = self._apply_ffn(spec, lparams, shared, h2)
+            x = x + out
+            aux = aux + a
+        # layer-boundary carry: d_model sharded over the model axis in
+        # training ("act" rule) so the remat-saved per-layer activations are
+        # 1/TP the size; serving maps "act" to None.
+        x = shard_hint(x, "batch", "seq", "act")
+        return x, aux
+
+    # ------------------------------------------------------------------
+    # full forward (train / prefill logits)
+    # ------------------------------------------------------------------
+
+    def _embed_tokens(self, params, tokens, prefix):
+        cfg = self.cfg
+        x = embed(params["embed"], tokens, cfg.embed_impl)
+        if cfg.embed_scale:
+            x = x * math.sqrt(cfg.d_model)
+        if prefix is not None:
+            x = jnp.concatenate([prefix.astype(x.dtype), x], axis=1)
+        return x
+
+    def forward(self, params, tokens, prefix=None, remat=None):
+        """tokens (B, S) -> (logits (B, S, V), aux). prefix (B, P, d) stub
+        embeddings are prepended (vlm / audio) and stripped from logits."""
+        cfg = self.cfg
+        remat = cfg.remat if remat is None else remat
+        x = self._embed_tokens(params, tokens, prefix)
+        positions = jnp.arange(x.shape[1])
+        shared = params.get("shared")
+        aux = jnp.zeros((), jnp.float32)
+
+        for seg_params, seg in zip(params["segments"], cfg.segments):
+            def step(carry, p_step, seg=seg):
+                x, aux = carry
+                for j, ls in enumerate(seg.pattern):
+                    x, a = self._apply_layer(ls, p_step[str(j)], shared, x,
+                                             positions)
+                    aux = aux + a
+                return (x, aux), None
+
+            step_fn = jax.checkpoint(step) if remat else step
+            (x, aux), _ = jax.lax.scan(step_fn, (x, aux), seg_params)
+
+        x = rmsnorm(params["final_norm"], x)
+        if prefix is not None:
+            x = x[:, prefix.shape[1]:]
+        logits = unembed(params["embed"], x)
+        return logits, aux
+
+    def loss_fn(self, params, batch):
+        """batch: {"tokens": (B,S), "labels": (B,S), ["prefix": (B,P,d)]}"""
+        cfg = self.cfg
+        prefix = batch.get("prefix")
+        if cfg.loss_chunk:
+            return self._chunked_loss(params, batch, prefix)
+        logits, aux = self.forward(params, batch["tokens"], prefix)
+        return cross_entropy(logits, batch["labels"]) + AUX_WEIGHT * aux
+
+    def _chunked_loss(self, params, batch, prefix):
+        """Cross-entropy computed per sequence chunk : never materializes the
+        full (B, S, V) logits — default for large-vocab archs."""
+        cfg = self.cfg
+        x, aux = self._hidden_states(params, batch["tokens"], prefix)
+        c = cfg.loss_chunk
+        b, s, d = x.shape
+        assert s % c == 0, f"seq {s} % loss_chunk {c} != 0"
+        xs = jnp.moveaxis(x.reshape(b, s // c, c, d), 1, 0)
+        ls = jnp.moveaxis(batch["labels"].reshape(b, s // c, c), 1, 0)
+
+        def chunk_nll(carry, inp):
+            xc, lc = inp
+            logits = unembed(params["embed"], xc)
+            return carry + cross_entropy(logits, lc) * c, None
+
+        chunk_fn = jax.checkpoint(chunk_nll) if cfg.remat else chunk_nll
+        total, _ = jax.lax.scan(chunk_fn, jnp.zeros((), jnp.float32),
+                                (xs, ls))
+        return total / s + AUX_WEIGHT * aux
+
+    def _hidden_states(self, params, tokens, prefix):
+        cfg = self.cfg
+        x = self._embed_tokens(params, tokens, prefix)
+        positions = jnp.arange(x.shape[1])
+        shared = params.get("shared")
+        aux = jnp.zeros((), jnp.float32)
+        for seg_params, seg in zip(params["segments"], cfg.segments):
+            def step(carry, p_step, seg=seg):
+                x, aux = carry
+                for j, ls in enumerate(seg.pattern):
+                    x, a = self._apply_layer(ls, p_step[str(j)], shared, x,
+                                             positions)
+                    aux = aux + a
+                return (x, aux), None
+            step_fn = jax.checkpoint(step) if cfg.remat else step
+            (x, aux), _ = jax.lax.scan(step_fn, (x, aux), seg_params)
+        x = rmsnorm(params["final_norm"], x)
+        if prefix is not None:
+            x = x[:, prefix.shape[1]:]
+        return x, aux
+
+    # ------------------------------------------------------------------
+    # serving: prefill + decode
+    # ------------------------------------------------------------------
+
+    def _layer_cache_shape(self, spec: LayerSpec, batch: int, max_len: int):
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        cache: dict[str, Any] = {}
+        if spec.mixer in ("attn", "shared_attn"):
+            cache["mixer"] = attn.init_kv_cache(
+                batch, spec.attn_kind, max_len, cfg.n_kv_heads,
+                cfg.resolved_head_dim, cfg.window, cfg.chunk, dt)
+        elif spec.mixer == "mamba2":
+            cache["mixer"] = ssm_mod.init_mamba2_cache(
+                batch, cfg.d_model, cfg.ssm_state, cfg.ssm_headdim,
+                cfg.ssm_expand, cfg.conv_kernel, dt)
+        elif spec.mixer == "rwkv6":
+            n_heads = cfg.d_model // cfg.rwkv_headdim
+            cache["mixer"] = {
+                "wkv": jnp.zeros((batch, n_heads, cfg.rwkv_headdim,
+                                  cfg.rwkv_headdim), jnp.float32),
+                "tm_last": jnp.zeros((batch, 1, cfg.d_model), dt),
+            }
+        if spec.ffn == "rwkv_cm":
+            cache["ffn"] = {"cm_last": jnp.zeros((batch, 1, cfg.d_model), dt)}
+        else:
+            cache["ffn"] = {}
+        return cache
+
+    def init_cache(self, batch: int, max_len: int):
+        """Zeroed caches matching the segment structure. KV caches for swa /
+        chunk layers are ring buffers of the window/chunk size."""
+        caches = []
+        for seg in self.cfg.segments:
+            pat = {}
+            for j, ls in enumerate(seg.pattern):
+                one = self._layer_cache_shape(ls, batch, max_len)
+                pat[str(j)] = jax.tree.map(
+                    lambda x: jnp.broadcast_to(
+                        x[None], (seg.n_steps,) + x.shape), one)
+            caches.append(pat)
+        return caches
+
+    def cache_axes(self):
+        """Logical axes for cache arrays (KV caches: batch + heads + seq)."""
+        def attn_axes(kind):
+            return {"k": (None, "batch", "cache_seq", "kv_tp", None),
+                    "v": (None, "batch", "cache_seq", "kv_tp", None)}
+        axes = []
+        for seg in self.cfg.segments:
+            pat = {}
+            for j, ls in enumerate(seg.pattern):
+                c: dict[str, Any] = {}
+                if ls.mixer in ("attn", "shared_attn"):
+                    c["mixer"] = attn_axes(ls.attn_kind)
+                elif ls.mixer == "mamba2":
+                    c["mixer"] = {"h": (None, "batch", "tp", None, None),
+                                  "conv": (None, "batch", None, "tp")}
+                elif ls.mixer == "rwkv6":
+                    c["mixer"] = {"wkv": (None, "batch", "tp", None, None),
+                                  "tm_last": (None, "batch", None, None)}
+                c["ffn"] = ({"cm_last": (None, "batch", None, None)}
+                            if ls.ffn == "rwkv_cm" else {})
+                pat[str(j)] = c
+            axes.append(pat)
+        return axes
+
+    def _decode_layer(self, spec: LayerSpec, lparams, shared, cache, x, pos):
+        cfg = self.cfg
+        h = rmsnorm(lparams["norm1"], x)
+        new_cache = dict(cache)
+        if spec.mixer in ("attn", "shared_attn"):
+            p = (self._merged_shared_attn(lparams["mixer"], shared)
+                 if spec.mixer == "shared_attn" else lparams["mixer"])
+            out, kv = attn.decode_attention(
+                p, h, cache["mixer"], pos, kind=spec.attn_kind,
+                window=cfg.window, chunk=cfg.chunk, use_rope=spec.use_rope,
+                rope_theta=cfg.rope_theta)
+            new_cache["mixer"] = kv
+        elif spec.mixer == "mamba2":
+            out, mc = ssm_mod.mamba2_decode(
+                lparams["mixer"], h, cache["mixer"], d_state=cfg.ssm_state,
+                headdim=cfg.ssm_headdim, expand=cfg.ssm_expand)
+            new_cache["mixer"] = mc
+        elif spec.mixer == "rwkv6":
+            out, rc = rwkv_mod.rwkv6_timemix_decode(
+                lparams["mixer"], h,
+                {**cache["mixer"], "cm_last": None}, cfg.rwkv_headdim)
+            new_cache["mixer"] = {"wkv": rc["wkv"], "tm_last": rc["tm_last"]}
+        else:
+            raise ValueError(spec.mixer)
+        x = x + out
+
+        if spec.ffn != "none":
+            h2 = rmsnorm(lparams["norm2"], x)
+            if spec.ffn == "rwkv_cm":
+                out2, fc = rwkv_mod.rwkv6_channelmix_decode(
+                    lparams["ffn"], h2, cache["ffn"])
+                new_cache["ffn"] = fc
+            else:
+                out2, _ = self._apply_ffn(spec, lparams, shared, h2)
+            x = x + out2
+        return x, new_cache
+
+    def decode_step(self, params, caches, tokens, pos):
+        """One decode step. tokens (B,) int32; pos () int32 = position of
+        this token (prefix-inclusive). Returns (logits (B, V), new caches)."""
+        cfg = self.cfg
+        x = embed(params["embed"], tokens[:, None], cfg.embed_impl)
+        if cfg.embed_scale:
+            x = x * math.sqrt(cfg.d_model)
+        shared = params.get("shared")
+        new_caches = []
+        for seg_params, seg_cache, seg in zip(params["segments"], caches,
+                                              cfg.segments):
+            def step(x, xs, seg=seg):
+                p_step, c_step = xs
+                new_c = {}
+                for j, ls in enumerate(seg.pattern):
+                    x, new_c[str(j)] = self._decode_layer(
+                        ls, p_step[str(j)], shared, c_step[str(j)], x, pos)
+                return x, new_c
+
+            x, new_seg_cache = jax.lax.scan(step, x, (seg_params, seg_cache))
+            new_caches.append(new_seg_cache)
+        x = rmsnorm(params["final_norm"], x)
+        logits = unembed(params["embed"], x)[:, 0]
+        return logits, new_caches
+
+    def prefill(self, params, tokens, prefix=None, max_len=None):
+        """Run the full prompt, building caches. Returns (last-token logits
+        (B, V), caches, next position)."""
+        cfg = self.cfg
+        x = self._embed_tokens(params, tokens, prefix)
+        b, s_total = x.shape[:2]
+        max_len = max_len or s_total
+        positions = jnp.arange(s_total)
+        shared = params.get("shared")
+        caches = self.init_cache(b, max_len)
+        new_caches = []
+        for seg_params, seg_cache, seg in zip(params["segments"], caches,
+                                              cfg.segments):
+            def step(x, xs, seg=seg):
+                p_step, c_step = xs
+                new_c = {}
+                for j, ls in enumerate(seg.pattern):
+                    x, new_c[str(j)] = self._prefill_layer(
+                        ls, p_step[str(j)], shared, c_step[str(j)], x,
+                        positions)
+                return x, new_c
+
+            x, new_seg_cache = jax.lax.scan(step, x, (seg_params, seg_cache))
+            new_caches.append(new_seg_cache)
+        x = rmsnorm(params["final_norm"], x)
+        logits = unembed(params["embed"], x[:, -1:])[:, 0]
+        return logits, new_caches, jnp.asarray(s_total, jnp.int32)
+
+    def _prefill_layer(self, spec: LayerSpec, lparams, shared, cache, x,
+                       positions):
+        cfg = self.cfg
+        h = rmsnorm(lparams["norm1"], x)
+        new_cache = dict(cache)
+        if spec.mixer in ("attn", "shared_attn"):
+            p = (self._merged_shared_attn(lparams["mixer"], shared)
+                 if spec.mixer == "shared_attn" else lparams["mixer"])
+            out, (k, v) = attn.attention_forward_kv(
+                p, h, positions, kind=spec.attn_kind, window=cfg.window,
+                chunk=cfg.chunk, use_rope=spec.use_rope,
+                rope_theta=cfg.rope_theta, block_q=cfg.block_q)
+            new_cache["mixer"] = attn.fill_kv_cache(
+                cache["mixer"], k, v, spec.attn_kind, cfg.window, cfg.chunk)
+        elif spec.mixer == "mamba2":
+            out, st = ssm_mod.mamba2_forward_state(
+                lparams["mixer"], h, d_state=cfg.ssm_state,
+                headdim=cfg.ssm_headdim, expand=cfg.ssm_expand,
+                chunk=cfg.ssd_chunk)
+            new_cache["mixer"] = st
+        elif spec.mixer == "rwkv6":
+            out, st = rwkv_mod.rwkv6_timemix_forward_state(
+                lparams["mixer"], h, cfg.rwkv_headdim, cfg.rwkv_chunk)
+            new_cache["mixer"] = st
+        else:
+            raise ValueError(spec.mixer)
+        x = x + out
+        if spec.ffn != "none":
+            h2 = rmsnorm(lparams["norm2"], x)
+            if spec.ffn == "rwkv_cm":
+                out2 = rwkv_mod.rwkv6_channelmix_forward(lparams["ffn"], h2)
+                new_cache["ffn"] = {"cm_last": h2[:, -1:]}
+            else:
+                out2, _ = self._apply_ffn(spec, lparams, shared, h2)
+            x = x + out2
+        return x, new_cache

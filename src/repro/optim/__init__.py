@@ -1,0 +1,7 @@
+from repro.optim.optimizers import Optimizer, sgd, momentum, adamw
+from repro.optim.schedules import constant, cosine_decay, linear_warmup
+
+__all__ = [
+    "Optimizer", "sgd", "momentum", "adamw",
+    "constant", "cosine_decay", "linear_warmup",
+]

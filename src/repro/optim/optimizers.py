@@ -1,0 +1,109 @@
+"""Optimizers built from scratch (no optax available offline).
+
+The paper's DP-PASGD update (Eq. 7a) is plain SGD — that is the faithful
+default. Momentum and AdamW are provided for the beyond-paper experiments.
+API mirrors the (init, update) gradient-transformation convention:
+``update`` returns a *delta* to be added to the params.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple[Any, Any]]  # (grads, state, params)
+
+
+def _resolve_lr(lr, step):
+    return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+class SgdState(NamedTuple):
+    step: jnp.ndarray
+
+
+def sgd(lr) -> Optimizer:
+    """theta <- theta - eta * g   (paper Eq. 7a)."""
+    def init(params):
+        return SgdState(step=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params):
+        eta = _resolve_lr(lr, state.step)
+        upd = jax.tree.map(lambda g, p: (-eta * g).astype(p.dtype), grads,
+                           params)
+        return upd, SgdState(step=state.step + 1)
+
+    return Optimizer(init, update)
+
+
+class MomentumState(NamedTuple):
+    step: jnp.ndarray
+    velocity: Any
+
+
+def momentum(lr, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return MomentumState(
+            step=jnp.zeros((), jnp.int32),
+            velocity=jax.tree.map(jnp.zeros_like, params),
+        )
+
+    def update(grads, state, params):
+        eta = _resolve_lr(lr, state.step)
+        vel = jax.tree.map(lambda v, g: beta * v + g, state.velocity, grads)
+        if nesterov:
+            upd = jax.tree.map(
+                lambda v, g, p: (-eta * (beta * v + g)).astype(p.dtype),
+                vel, grads, params)
+        else:
+            upd = jax.tree.map(lambda v, p: (-eta * v).astype(p.dtype), vel,
+                               params)
+        return upd, MomentumState(step=state.step + 1, velocity=vel)
+
+    return Optimizer(init, update)
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        f32zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree.map(f32zeros, params),
+            nu=jax.tree.map(f32zeros, params),
+        )
+
+    def update(grads, state, params):
+        step = state.step + 1
+        eta = _resolve_lr(lr, state.step)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state.mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu, grads)
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def _upd(m, v, p):
+            mhat = m / bc1
+            vhat = v / bc2
+            delta = -eta * (mhat / (jnp.sqrt(vhat) + eps)
+                            + weight_decay * p.astype(jnp.float32))
+            return delta.astype(p.dtype)
+
+        upd = jax.tree.map(_upd, mu, nu, params)
+        return upd, AdamWState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init, update)

@@ -1,0 +1,27 @@
+"""Learning-rate schedules (callables step -> lr)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    def sched(step):
+        return jnp.asarray(lr, dtype=jnp.float32)
+    return sched
+
+
+def cosine_decay(lr: float, decay_steps: int, final_frac: float = 0.0):
+    def sched(step):
+        t = jnp.clip(step / decay_steps, 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.asarray(lr * (final_frac + (1.0 - final_frac) * cos), jnp.float32)
+    return sched
+
+
+def linear_warmup(base, warmup_steps: int):
+    """Wrap another schedule (or float) with linear warmup."""
+    inner = base if callable(base) else constant(base)
+    def sched(step):
+        warm = jnp.minimum(1.0, (step + 1) / max(1, warmup_steps))
+        return warm * inner(jnp.maximum(step - warmup_steps, 0))
+    return sched

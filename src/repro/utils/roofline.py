@@ -1,0 +1,86 @@
+"""Three-term roofline model for TPU v5e (target hardware).
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = collective_bytes_per_device / link_bw
+
+The post-SPMD HLO module IS the per-device program, so cost_analysis()
+numbers are already per-device; no extra division by chip count.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+# -- TPU v5e hardware constants (from the brief) ---------------------------
+PEAK_FLOPS_BF16 = 197e12     # FLOP/s per chip
+HBM_BW = 819e9               # B/s per chip
+ICI_BW = 50e9                # B/s per link (~1 link per sharded axis hop)
+
+
+@dataclass
+class RooflineTerms:
+    flops: float                 # per-device HLO flops
+    hbm_bytes: float             # per-device HLO bytes accessed
+    coll_bytes: float            # per-device collective bytes
+    model_flops: float = 0.0     # 6*N*D (train) / 2*N*D (inference), global
+    chips: int = 1
+    coll_breakdown: dict = field(default_factory=dict)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / (HLO flops summed over chips)."""
+        total = self.flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops,
+            "hbm_bytes_per_device": self.hbm_bytes,
+            "coll_bytes_per_device": self.coll_bytes,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "chips": self.chips,
+            "coll_breakdown": self.coll_breakdown,
+        }
+
+
+def model_flops_estimate(n_params_active: float, tokens: float,
+                         kind: str) -> float:
+    """6*N*D for training, 2*N*D for inference forward passes."""
+    if kind == "train":
+        return 6.0 * n_params_active * tokens
+    return 2.0 * n_params_active * tokens
+
+
+def active_params(cfg, n_params_total: float) -> float:
+    """MoE: scale expert params down to the activated top-k fraction."""
+    if not cfg.n_experts:
+        return n_params_total
+    # expert FFN params per layer: 3 * d_model * moe_d_ff * n_experts
+    moe_layers = sum(1 for ls in cfg.layer_specs() if ls.ffn == "moe")
+    expert_total = 3.0 * cfg.d_model * (cfg.moe_d_ff or cfg.d_ff) \
+        * cfg.n_experts * moe_layers
+    expert_active = expert_total * cfg.top_k / cfg.n_experts
+    return n_params_total - expert_total + expert_active

@@ -1,0 +1,79 @@
+"""Pytree math utilities used across the framework."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_axpy(alpha, x, y):
+    """alpha * x + y."""
+    return jax.tree.map(lambda xi, yi: alpha * xi + yi, x, y)
+
+def tree_zeros_like(a):
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_dot(a, b):
+    leaves = jax.tree.map(lambda x, y: jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)), a, b)
+    return jax.tree.reduce(jnp.add, leaves)
+
+
+def tree_sq_norm(a):
+    leaves = jax.tree.map(lambda x: jnp.sum(jnp.square(x.astype(jnp.float32))), a)
+    return jax.tree.reduce(jnp.add, leaves)
+
+
+def tree_norm(a):
+    return jnp.sqrt(tree_sq_norm(a))
+
+
+def tree_size(a) -> int:
+    """Total number of scalar parameters in the tree (static)."""
+    return sum(x.size for x in jax.tree.leaves(a))
+
+
+def tree_bytes(a) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(a))
+
+
+def tree_mean_over_axis0(a):
+    """Mean over a leading (client) axis of every leaf."""
+    return jax.tree.map(lambda x: jnp.mean(x, axis=0), a)
+
+
+def tree_broadcast_axis0(a, n: int):
+    """Tile every leaf along a new leading axis of size n."""
+    return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), a)
+
+
+def tree_cast(a, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), a)
+
+
+def tree_split_keys(key, tree):
+    """One PRNG key per leaf, returned as a matching pytree."""
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(treedef, list(keys))
+
+
+def tree_add_noise(key, tree, sigma):
+    """Add isotropic N(0, sigma^2) noise to every leaf, preserving dtypes
+    (sigma may be a traced f32 scalar)."""
+    keytree = tree_split_keys(key, tree)
+    def _noise(k, x):
+        n = sigma * jax.random.normal(k, x.shape, dtype=jnp.float32)
+        return (x.astype(jnp.float32) + n).astype(x.dtype)
+    return jax.tree.map(_noise, keytree, tree)

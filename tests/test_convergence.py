@@ -1,0 +1,49 @@
+"""Tests for the Theorem-1 convergence bound."""
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.convergence import (
+    ProblemConstants,
+    bound_b,
+    reduces_to_distributed_sgd,
+    theorem1_bound,
+)
+
+CONSTS = ProblemConstants(eta=0.05, lam=0.5, lip=2.0, alpha=1.0, xi2=0.5,
+                          dim=50, n_clients=8)
+
+
+def test_tau1_sigma0_reduces_to_dsgd():
+    b = theorem1_bound(CONSTS, 100, tau=1.0, sigmas2=[0.0] * 8)
+    assert b == pytest.approx(reduces_to_distributed_sgd(CONSTS, 100))
+    # with tau=1, sigma=0 the floor only carries the minibatch variance term
+    assert bound_b(CONSTS, 1.0, [0.0] * 8) == pytest.approx(
+        CONSTS.eta * CONSTS.lip * CONSTS.xi2 / (2 * CONSTS.lam * CONSTS.n_clients))
+
+
+@settings(max_examples=100, deadline=None)
+@given(k=st.integers(1, 5000), tau=st.integers(1, 20),
+       sig=st.floats(0.0, 5.0))
+def test_bound_monotonicity(k, tau, sig):
+    """Paper's discussion after Thm 1: bound grows with tau and sigma,
+    shrinks with K (for the decaying term)."""
+    s2 = [sig ** 2] * CONSTS.n_clients
+    b = theorem1_bound(CONSTS, k, tau, s2)
+    assert b >= 0 or CONSTS.alpha < bound_b(CONSTS, tau, s2)
+    assert theorem1_bound(CONSTS, k, tau + 1, s2) >= b - 1e-12
+    s2_hi = [(sig + 1.0) ** 2] * CONSTS.n_clients
+    assert theorem1_bound(CONSTS, k, tau, s2_hi) >= b - 1e-12
+
+
+def test_bound_decreases_with_k_before_floor():
+    s2 = [0.01] * CONSTS.n_clients
+    vals = [theorem1_bound(CONSTS, k, 5, s2) for k in (1, 5, 25, 125)]
+    assert vals[0] > vals[-1]
+
+
+def test_lr_constraint_eq21e():
+    assert CONSTS.lr_constraint_ok(1.0)
+    tmax = CONSTS.tau_max()
+    assert CONSTS.lr_constraint_ok(tmax)
+    assert not CONSTS.lr_constraint_ok(tmax + 1.0)

@@ -1,0 +1,82 @@
+"""Tests for the optimal-design solver (paper §5, §7)."""
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.convergence import ProblemConstants, theorem1_bound
+from repro.core.design import DesignProblem, ResourceModel, grid_search_reference
+
+
+def make_problem(c_th=1000.0, eps_th=10.0, eta=0.05, lam=0.5, lip=2.0,
+                 alpha=1.0, xi2=0.5, dim=100, m=16, x=1628) -> DesignProblem:
+    consts = ProblemConstants(eta=eta, lam=lam, lip=lip, alpha=alpha, xi2=xi2,
+                              dim=dim, n_clients=m)
+    return DesignProblem(
+        consts=consts,
+        resource=ResourceModel(c1=100.0, c2=1.0),   # paper §8.1 defaults
+        clip_norm=1.0, batch_sizes=[x] * m, delta=1e-4,
+        eps_th=eps_th, c_th=c_th)
+
+
+def test_resource_model_eq8():
+    r = ResourceModel(c1=100.0, c2=1.0)
+    assert r.cost(100, 10) == pytest.approx(100 * 100 / 10 + 100)
+    # Eq. 22: binding tau
+    tau = r.tau_binding(100, 1000.0)
+    assert r.cost(100, tau) == pytest.approx(1000.0)
+
+
+def test_solution_respects_budgets():
+    p = make_problem()
+    sol = p.solve()
+    assert sol.cost <= p.c_th * (1 + 1e-9)
+    assert sol.tau >= 1 and sol.k >= sol.tau
+    assert sol.k % sol.tau == 0              # Theorem-1 divisibility
+    assert p.consts.lr_constraint_ok(sol.tau)
+    # privacy: Eq. 9 at the chosen sigma must be within budget
+    from repro.core.privacy import epsilon_after_k
+    for sig, x in zip(sol.sigmas, p.batch_sizes):
+        assert epsilon_after_k(sol.k, p.clip_norm, x, sig, p.delta) \
+            <= p.eps_th * (1 + 1e-6)
+
+
+def test_solver_close_to_grid_search():
+    """Paper §8.3: solver's tau close to brute-force optimum (on surrogate)."""
+    p = make_problem()
+    sol = p.solve()
+    tau_g, k_g, f_g = grid_search_reference(p, taus=range(1, 21))
+    f_sol = theorem1_bound(p.consts, sol.k, sol.tau,
+                           [s * s for s in sol.sigmas])
+    # solver surrogate value within 10% of grid-search optimum
+    assert f_sol <= f_g * 1.10
+
+
+@settings(max_examples=30, deadline=None)
+@given(c_th=st.floats(300, 3000), eps_th=st.floats(0.5, 20))
+def test_solver_feasible_across_budgets(c_th, eps_th):
+    p = make_problem(c_th=c_th, eps_th=eps_th)
+    sol = p.solve()
+    assert sol.cost <= c_th * (1 + 1e-9)
+    assert math.isfinite(sol.predicted_bound)
+
+
+def test_tau_star_shifts_with_budgets():
+    """Paper §8.5: tau* decreases with resource budget, increases with eps."""
+    p_small_c = make_problem(c_th=500.0, eps_th=4.0)
+    p_large_c = make_problem(c_th=2000.0, eps_th=4.0)
+    assert p_small_c.solve().tau >= p_large_c.solve().tau
+
+    p_small_e = make_problem(c_th=1000.0, eps_th=1.0)
+    p_large_e = make_problem(c_th=1000.0, eps_th=10.0)
+    assert p_small_e.solve().tau <= p_large_e.solve().tau
+
+
+def test_objective_monotone_in_tau_at_fixed_k():
+    """dF/dtau > 0 (paper §7): larger tau at same K, sigma is never better."""
+    p = make_problem()
+    consts = p.consts
+    sig2 = [1.0] * consts.n_clients
+    vals = [theorem1_bound(consts, 500, t, sig2) for t in (1, 2, 5, 10)]
+    assert vals == sorted(vals)

@@ -1,0 +1,211 @@
+"""Per-kernel allclose sweeps vs the ref.py pure-jnp oracles.
+
+Every Pallas kernel runs in interpret=True on CPU (kernel body executed in
+Python) and is compared against the oracle over a sweep of shapes/dtypes
+(pytest params + hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ref
+from repro.kernels.dp_clip_noise import dp_clip_noise
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mamba2_ssd import mamba2_ssd
+from repro.kernels.rwkv6_scan import rwkv6_scan
+from repro.kernels.ops import dp_clip_noise_tree
+
+
+# ------------------------- dp_clip_noise ----------------------------------
+
+@pytest.mark.parametrize("n", [17, 1024, 64 * 1024 + 3])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("scale_big", [True, False])
+def test_dp_clip_noise_matches_ref(n, dtype, scale_big):
+    key = jax.random.PRNGKey(0)
+    g = jax.random.normal(key, (n,), dtype) * (100.0 if scale_big else 1e-3)
+    noise = jax.random.normal(jax.random.PRNGKey(1), (n,), jnp.float32)
+    got, gnorm = dp_clip_noise(g, noise, 1.0, 0.5, block=4096,
+                               interpret=True)
+    want, wnorm = ref.dp_clip_noise_ref(g, noise, 1.0, 0.5)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(float(gnorm), float(wnorm), rtol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 5000), clip=st.floats(0.01, 10.0),
+       sigma=st.floats(0.0, 5.0), seed=st.integers(0, 2**30))
+def test_dp_clip_noise_property(n, clip, sigma, seed):
+    key = jax.random.PRNGKey(seed)
+    g = jax.random.normal(key, (n,), jnp.float32) * 10.0
+    noise = jnp.zeros((n,), jnp.float32)
+    got, norm = dp_clip_noise(g, noise, clip, sigma, block=1024,
+                              interpret=True)
+    # with zero noise, output norm is min(norm, clip)
+    out_norm = float(jnp.linalg.norm(got.astype(jnp.float32)))
+    assert out_norm <= clip * (1 + 1e-4) or out_norm <= float(norm) * (1 + 1e-4)
+    want, _ = ref.dp_clip_noise_ref(g, noise, clip, sigma)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_dp_clip_noise_tree_matches_core():
+    from repro.core.clipping import clip_tree
+    from repro.utils.tree import tree_add_noise
+    tree = {"a": jax.random.normal(jax.random.PRNGKey(0), (37, 5)) * 8,
+            "b": {"c": jax.random.normal(jax.random.PRNGKey(1), (11,))}}
+    key = jax.random.PRNGKey(2)
+    got, norm = dp_clip_noise_tree(tree, key, 1.0, 0.0)
+    want, wnorm = clip_tree(tree, 1.0)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5)
+    np.testing.assert_allclose(float(norm), float(wnorm), rtol=1e-5)
+
+
+# ------------------------- flash attention --------------------------------
+
+@pytest.mark.parametrize("s,bq,bk", [(128, 64, 64), (256, 128, 64),
+                                     (64, 64, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(s, bq, bk, dtype):
+    b, h, hd = 2, 3, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, h, s, hd), dtype)
+    k = jax.random.normal(ks[1], (b, h, s, hd), dtype)
+    v = jax.random.normal(ks[2], (b, h, s, hd), dtype)
+    got = flash_attention(q, k, v, block_q=bq, block_k=bk, interpret=True)
+    want = ref.flash_attention_ref(q, k, v)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("window", [32, 100])
+def test_flash_attention_window(window):
+    b, h, s, hd = 1, 2, 256, 32
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q, k, v = (jax.random.normal(kk, (b, h, s, hd), jnp.float32)
+               for kk in ks)
+    got = flash_attention(q, k, v, window=window, block_q=64, block_k=64,
+                          interpret=True)
+    want = ref.flash_attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_matches_model_blocked_attention():
+    """Pallas kernel == the lax blockwise attention used in the model."""
+    from repro.models.attention import blocked_causal_attention
+    b, h, s, hd = 1, 4, 128, 32
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q, k, v = (jax.random.normal(kk, (b, s, h, hd), jnp.float32)
+               for kk in ks)
+    lax_out = blocked_causal_attention(q, k, v, block_q=32)
+    pallas_out = flash_attention(
+        jnp.moveaxis(q, 2, 1), jnp.moveaxis(k, 2, 1), jnp.moveaxis(v, 2, 1),
+        block_q=32, block_k=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(jnp.moveaxis(pallas_out, 1, 2)),
+                               np.asarray(lax_out), rtol=2e-4, atol=2e-5)
+
+
+# ------------------------- rwkv6 scan --------------------------------------
+
+@pytest.mark.parametrize("s", [1, 7, 64])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rwkv6_scan_matches_ref(s, dtype):
+    b, h, hd = 2, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    r = jax.random.normal(ks[0], (b, h, s, hd), dtype)
+    k = jax.random.normal(ks[1], (b, h, s, hd), dtype)
+    v = jax.random.normal(ks[2], (b, h, s, hd), dtype)
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, h, s, hd))).astype(dtype)
+    u = jax.random.normal(ks[4], (h, hd), jnp.float32)
+    got_y, got_s = rwkv6_scan(r, k, v, w, u, interpret=True)
+    want_y, want_s = ref.rwkv6_scan_ref(r, k, v, w, u)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(got_y, np.float32),
+                               np.asarray(want_y, np.float32),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(got_s), np.asarray(want_s),
+                               rtol=tol, atol=tol)
+
+
+def test_rwkv6_scan_with_initial_state():
+    b, h, s, hd = 1, 1, 5, 8
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    r, k, v = (jax.random.normal(kk, (b, h, s, hd)) for kk in ks[:3])
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, h, s, hd)))
+    u = jax.random.normal(ks[4], (h, hd))
+    s0 = jnp.ones((b, h, hd, hd), jnp.float32) * 0.3
+    got_y, got_s = rwkv6_scan(r, k, v, w, u, s0, interpret=True)
+    want_y, want_s = ref.rwkv6_scan_ref(r, k, v, w, u, s0)
+    np.testing.assert_allclose(np.asarray(got_y), np.asarray(want_y),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got_s), np.asarray(want_s),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_rwkv6_kernel_matches_model_scan():
+    """Pallas kernel == models.rwkv.wkv6_scan (the lax baseline)."""
+    from repro.models.rwkv import wkv6_scan
+    b, h, s, hd = 2, 3, 12, 8
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    # model layout (B, S, H, hd)
+    r, k, v = (jax.random.normal(kk, (b, s, h, hd)) for kk in ks[:3])
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, s, h, hd)))
+    u = jax.random.normal(ks[4], (h, hd))
+    y_model, s_model = wkv6_scan(r, k, v, w, u)
+    perm = lambda t: jnp.moveaxis(t, 2, 1)  # -> (B, H, S, hd)
+    y_k, s_k = rwkv6_scan(perm(r), perm(k), perm(v), perm(w), u,
+                          interpret=True)
+    np.testing.assert_allclose(np.asarray(jnp.moveaxis(y_k, 1, 2)),
+                               np.asarray(y_model), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_model),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ------------------------- mamba2 ssd --------------------------------------
+
+@pytest.mark.parametrize("s,chunk", [(32, 8), (64, 16), (16, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mamba2_ssd_matches_ref(s, chunk, dtype):
+    b, h, p, n = 2, 3, 8, 4
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    x = jax.random.normal(ks[0], (b, s, h, p), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h))).astype(jnp.float32)
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    b_in = jax.random.normal(ks[3], (b, s, n), dtype)
+    c_in = jax.random.normal(jax.random.PRNGKey(9), (b, s, n), dtype)
+    got_y, got_s = mamba2_ssd(x, dt, a, b_in, c_in, chunk=chunk,
+                              interpret=True)
+    want_y, want_s = ref.mamba2_ssd_ref(x, dt, a, b_in, c_in)
+    tol = 6e-2 if dtype == jnp.bfloat16 else 1e-3
+    np.testing.assert_allclose(np.asarray(got_y, np.float32),
+                               np.asarray(want_y, np.float32),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(got_s), np.asarray(want_s),
+                               rtol=tol, atol=tol)
+
+
+def test_ssd_chunked_model_matches_sequential_ref():
+    """models.ssm.ssd_chunked (lax baseline) == sequential oracle."""
+    from repro.models.ssm import ssd_chunked
+    b, s, h, p, n = 2, 32, 2, 8, 4
+    ks = jax.random.split(jax.random.PRNGKey(5), 5)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    b_in = jax.random.normal(ks[3], (b, s, n))
+    c_in = jax.random.normal(ks[4], (b, s, n))
+    got_y, got_s = ssd_chunked(x, dt, a, b_in, c_in, chunk=8)
+    want_y, want_s = ref.mamba2_ssd_ref(x, dt, a, b_in, c_in)
+    np.testing.assert_allclose(np.asarray(got_y), np.asarray(want_y),
+                               rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(got_s), np.asarray(want_s),
+                               rtol=1e-3, atol=1e-4)

@@ -1,0 +1,101 @@
+"""Property + unit tests for the zCDP accountant (paper §3, §5.2, Eq. 9/23)."""
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import privacy
+
+
+def test_gaussian_zcdp_lemma2():
+    # Lemma 2: rho = Delta^2 / (2 sigma^2)
+    assert privacy.gaussian_zcdp(2.0, 1.0) == pytest.approx(2.0)
+    assert privacy.gaussian_zcdp(1.0, 2.0) == pytest.approx(0.125)
+    assert privacy.gaussian_zcdp(1.0, 0.0) == math.inf
+
+
+def test_composition_lemma1():
+    assert privacy.compose_zcdp(0.1, 0.2, 0.3) == pytest.approx(0.6)
+
+
+def test_zcdp_to_dp_lemma3():
+    rho, delta = 0.5, 1e-4
+    eps = privacy.zcdp_to_dp(rho, delta)
+    assert eps == pytest.approx(rho + 2 * math.sqrt(rho * math.log(1 / delta)))
+
+
+def test_eq9_matches_accountant():
+    k, g, x, sigma, delta = 200, 1.0, 64, 1.5, 1e-4
+    acc = privacy.PrivacyAccountant(clip_norm=g, delta=delta)
+    acc.register_client(0, x, sigma)
+    acc.step(k)
+    assert acc.epsilon(0) == pytest.approx(
+        privacy.epsilon_after_k(k, g, x, sigma, delta))
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    k=st.integers(1, 100_000),
+    g=st.floats(0.01, 100.0),
+    x=st.integers(1, 10_000),
+    eps_th=st.floats(0.01, 100.0),
+    delta=st.floats(1e-8, 1e-2),
+)
+def test_sigma_star_inverts_eq9(k, g, x, eps_th, delta):
+    """PROPERTY: the (corrected) Eq.-23 noise exactly spends the eps budget."""
+    sigma = privacy.sigma_star(k, g, x, eps_th, delta)
+    eps = privacy.epsilon_after_k(k, g, x, sigma, delta)
+    assert eps == pytest.approx(eps_th, rel=1e-6)
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    k=st.integers(1, 10_000),
+    sigma=st.floats(0.1, 50.0),
+    x=st.integers(1, 1_000),
+)
+def test_epsilon_monotone_in_k_and_sigma(k, sigma, x):
+    """PROPERTY: eps grows with K, shrinks with sigma (paper §5.2 discussion)."""
+    e1 = privacy.epsilon_after_k(k, 1.0, x, sigma, 1e-4)
+    e2 = privacy.epsilon_after_k(k + 1, 1.0, x, sigma, 1e-4)
+    e3 = privacy.epsilon_after_k(k, 1.0, x, sigma * 2, 1e-4)
+    assert e2 > e1 > e3
+
+
+def test_paper_eq23_as_printed_is_inconsistent():
+    """Documents the erratum: the printed Eq. (23) under-spends noise."""
+    k, g, x, eps_th, delta = 100, 1.0, 32, 1.39, 1e-4
+    z = privacy.privacy_z(eps_th, delta)
+    sigma_printed = math.sqrt(2 * k * g * g / (x * x * z))
+    eps_printed = privacy.epsilon_after_k(k, g, x, sigma_printed, delta)
+    assert eps_printed > 10 * eps_th  # badly violates the budget
+    sigma_fixed = privacy.sigma_star(k, g, x, eps_th, delta)
+    assert privacy.epsilon_after_k(k, g, x, sigma_fixed, delta) == pytest.approx(
+        eps_th, rel=1e-6)
+
+
+def test_rho_budget_identity_with_z():
+    # rho* = eps^2 / Z identity used in design.py
+    eps_th, delta = 4.0, 1e-4
+    assert privacy.rho_budget(eps_th, delta) == pytest.approx(
+        eps_th ** 2 / privacy.privacy_z(eps_th, delta))
+
+
+def test_remaining_steps():
+    acc = privacy.PrivacyAccountant(clip_norm=1.0, delta=1e-4)
+    acc.register_client(0, 100, 2.0)
+    n = acc.remaining_steps(0, eps_th=1.0)
+    assert n > 0
+    acc.step(n)
+    assert acc.epsilon(0) <= 1.0 + 1e-9
+    acc.step(1)
+    assert acc.epsilon(0) > 1.0
+
+
+def test_accountant_validates_inputs():
+    acc = privacy.PrivacyAccountant(clip_norm=1.0, delta=1e-4)
+    with pytest.raises(ValueError):
+        acc.register_client(0, 0, 1.0)
+    with pytest.raises(ValueError):
+        acc.register_client(0, 10, -1.0)

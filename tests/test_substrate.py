@@ -1,0 +1,159 @@
+"""Tests for data pipeline, optimizers, and checkpointing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.checkpoint import (
+    load_checkpoint,
+    load_federation_state,
+    save_checkpoint,
+    save_federation_state,
+)
+from repro.core.fl import Budgets, Federation, FLConfig
+from repro.data import adult_like, split_by_group, split_dirichlet, split_iid, vehicle_like
+from repro.data.tokens import FederatedTokenStream, TokenTaskConfig
+from repro.models.linear import init_linear, logreg_loss
+from repro.optim import adamw, momentum, sgd, cosine_decay, linear_warmup
+
+
+# ---------------------------- data ----------------------------------------
+
+def test_adult_like_matches_paper_setting():
+    ds = adult_like()
+    assert ds.n == 32_561
+    fed = split_by_group(ds)
+    assert fed.n_clients == 16          # 16 education levels -> 16 devices
+    sizes = [c.n_train + c.x_val.shape[0] + c.x_test.shape[0]
+             for c in fed.clients]
+    assert sum(sizes) == ds.n
+    # non-iid: client sizes vary a lot (paper: mean 2035, std 4367)
+    assert np.std(sizes) > 0.5 * np.mean(sizes)
+    # rows in unit ball
+    assert np.linalg.norm(ds.x, axis=1).max() <= 1.0 + 1e-5
+
+
+def test_vehicle_like_matches_paper_setting():
+    ds = vehicle_like(per_sensor=200)   # reduced for test speed
+    fed = split_by_group(ds)
+    assert fed.n_clients == 23
+    assert ds.dim == 100
+
+
+def test_iid_split_even():
+    ds = adult_like(n=3200, dim=16)
+    fed = split_iid(ds, 16)
+    sizes = [c.n_train for c in fed.clients]
+    assert max(sizes) - min(sizes) <= 2
+
+
+def test_dirichlet_skew():
+    ds = adult_like(n=4000, dim=16)
+    skew = split_dirichlet(ds, 8, alpha=0.1, seed=0)
+    even = split_dirichlet(ds, 8, alpha=100.0, seed=0)
+    def label_var(fed):
+        rates = [c.y_train.mean() for c in fed.clients]
+        return np.var(rates)
+    assert label_var(skew) > label_var(even)
+
+
+def test_token_stream_noniid_and_shapes():
+    cfg = TokenTaskConfig(vocab=1024, seq_len=32, n_clients=4, seed=0)
+    stream = FederatedTokenStream(cfg, batch_size=8)
+    rng = np.random.default_rng(0)
+    b = stream.sampler(0, 3, rng)
+    assert b["tokens"].shape == (3, 8, 32)
+    assert b["labels"].shape == (3, 8, 32)
+    assert (b["tokens"] >= 0).all() and (b["tokens"] < 1024).all()
+    # next-token alignment
+    full0 = np.concatenate([b["tokens"][0, 0, :1],
+                            b["labels"][0, 0]])
+    np.testing.assert_array_equal(full0[1:], b["labels"][0, 0])
+    # non-iid: token histograms differ across clients
+    h = []
+    for c in range(4):
+        toks = stream.sampler(c, 4, rng)["tokens"].ravel()
+        h.append(np.bincount(toks, minlength=1024) / toks.size)
+    assert np.abs(h[0] - h[1]).sum() > 0.3
+
+
+# ---------------------------- optimizers ----------------------------------
+
+def _quad_loss(p, _):
+    return jnp.sum((p["w"] - 3.0) ** 2)
+
+
+@pytest.mark.parametrize("opt", [sgd(0.1), momentum(0.05), adamw(0.3)])
+def test_optimizers_minimize_quadratic(opt):
+    params = {"w": jnp.zeros((4,))}
+    state = opt.init(params)
+    for _ in range(200):
+        g = jax.grad(_quad_loss)(params, None)
+        upd, state = opt.update(g, state, params)
+        params = jax.tree.map(jnp.add, params, upd)
+    np.testing.assert_allclose(params["w"], 3.0, atol=1e-2)
+
+
+def test_schedules():
+    s = cosine_decay(1.0, 100)
+    assert float(s(0)) == pytest.approx(1.0)
+    assert float(s(100)) == pytest.approx(0.0, abs=1e-6)
+    w = linear_warmup(cosine_decay(1.0, 100), 10)
+    assert float(w(0)) == pytest.approx(0.1)
+    assert float(w(9)) == pytest.approx(1.0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(lr=st.floats(1e-3, 0.5), steps=st.integers(1, 50))
+def test_sgd_is_paper_eq7a(lr, steps):
+    """SGD update is exactly theta - eta*g."""
+    opt = sgd(lr)
+    params = {"w": jnp.ones((3,))}
+    state = opt.init(params)
+    g = {"w": jnp.asarray([1.0, -2.0, 0.5])}
+    for _ in range(steps):
+        upd, state = opt.update(g, state, params)
+        params = jax.tree.map(jnp.add, params, upd)
+    np.testing.assert_allclose(
+        params["w"], 1.0 - lr * steps * np.asarray([1.0, -2.0, 0.5]),
+        rtol=2e-5, atol=1e-5)
+
+
+# ---------------------------- checkpoint ----------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": np.arange(10, dtype=np.float32).reshape(2, 5),
+            "b": {"c": np.ones((3,), np.int32)},
+            "d": [np.zeros((2, 2)), np.full((1,), 7.0)]}
+    save_checkpoint(str(tmp_path), tree, step=42, extra={"note": "hi"})
+    loaded, step, extra = load_checkpoint(str(tmp_path), like=tree)
+    assert step == 42 and extra["note"] == "hi"
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(loaded)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_federation_checkpoint_resume(tmp_path):
+    ds = adult_like(n=800, dim=12)
+    fed_data = split_iid(ds, 4)
+    cfg = FLConfig(n_clients=4, tau=3, clip_norm=1.0, dp=True)
+    mk = lambda: Federation(
+        cfg=cfg, loss_fn=logreg_loss, optimizer=sgd(0.2),
+        params0=init_linear(12), sampler=fed_data.make_sampler(16),
+        sigmas=np.full((4,), 0.5, np.float32),
+        batch_sizes=fed_data.batch_sizes(16))
+    f1 = mk()
+    f1.train(Budgets(c_th=400.0, eps_th=1e9), max_rounds=3)
+    save_federation_state(str(tmp_path), f1)
+
+    f2 = mk()
+    load_federation_state(str(tmp_path), f2)
+    assert f2.rounds_done == f1.rounds_done
+    assert f2.accountant.max_epsilon() == pytest.approx(
+        f1.accountant.max_epsilon())
+    for a, b in zip(jax.tree.leaves(f1.params), jax.tree.leaves(f2.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # resumed federation keeps training
+    f2.train(Budgets(c_th=800.0, eps_th=1e9), max_rounds=6)
+    assert f2.rounds_done > f1.rounds_done
