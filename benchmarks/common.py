@@ -10,8 +10,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import (
+    FederationSpec,
+    eval_params,
+    init_state,
+    round_batch,
+    run_round,
+    train,
+)
 from repro.core.convergence import ProblemConstants
-from repro.core.fl import Budgets, Federation, FLConfig, design_sigmas
+from repro.core.fl import design_sigmas
 from repro.data import (
     adult_like,
     split_by_group,
@@ -92,19 +100,22 @@ def estimate_constants(case: Case, probe_rounds: int = 30) -> ProblemConstants:
     xi2 = float(np.mean(np.var(grads, axis=0)) * grads.shape[1])
 
     # alpha and lambda: cheap non-private probe run
-    cfg = FLConfig(n_clients=fed.n_clients, tau=5, dp=False)
-    probe = Federation(cfg=cfg, loss_fn=case.loss_fn, optimizer=sgd(LR),
-                       params0=params0, sampler=sampler,
-                       sigmas=np.zeros(fed.n_clients, np.float32),
-                       batch_sizes=fed.batch_sizes(BATCH))
+    spec = FederationSpec(n_clients=fed.n_clients, tau=5, dp=False,
+                          loss_fn=case.loss_fn, optimizer=sgd(LR),
+                          sigmas=(0.0,) * fed.n_clients,
+                          batch_sizes=tuple(fed.batch_sizes(BATCH)))
+    state = init_state(spec, params0)
+    probe_rng = np.random.default_rng(spec.seed)
     losses = []
     for _ in range(probe_rounds):
-        losses.append(probe.round()["loss"])
+        batch = round_batch(spec, sampler, probe_rng)
+        state, rec = run_round(spec, state, batch, check_budgets=False)
+        losses.append(rec["loss"])
     l0, lstar = losses[0], min(losses)
     alpha = max(l0 - lstar, 1e-3) + 0.05
     # strong convexity: fit exponential decay rate of the loss gap
     gaps = np.maximum(np.asarray(losses) - lstar + 1e-4, 1e-6)
-    k = np.arange(len(gaps)) * cfg.tau
+    k = np.arange(len(gaps)) * spec.tau
     slope = np.polyfit(k, np.log(gaps), 1)[0]
     lam = min(max(-slope / LR, 1e-3), 1.0 / LR * 0.99)
     return ProblemConstants(eta=LR, lam=float(lam), lip=float(lip),
@@ -117,22 +128,24 @@ def run_dp_pasgd(case: Case, tau: int, c_th: float, eps_th: float,
     """Train DP-PASGD at a given tau until the budgets bind (paper's Eq. 8/9
     schedule: K chosen by the budgets; sigma by Eq. 23)."""
     fed = case.fed
-    budgets = Budgets(c_th=c_th, eps_th=eps_th, c1=C1, c2=C2)
     k_max = int(c_th / (C1 / tau + C2) // tau * tau)
     k = k_budget or max(tau, k_max)
     sig = design_sigmas(k, CLIP, fed.batch_sizes(BATCH), eps_th, DELTA)
-    cfg = FLConfig(n_clients=fed.n_clients, tau=tau, clip_norm=CLIP, dp=True)
-    f = Federation(cfg=cfg, loss_fn=case.loss_fn, optimizer=sgd(LR),
-                   params0=init_linear(case.dim), sampler=fed.make_sampler(BATCH),
-                   sigmas=sig, batch_sizes=fed.batch_sizes(BATCH), seed=seed)
+    spec = FederationSpec(n_clients=fed.n_clients, tau=tau,
+                          loss_fn=case.loss_fn, optimizer=sgd(LR),
+                          clip_norm=CLIP, dp=True,
+                          sigmas=tuple(float(s) for s in sig),
+                          batch_sizes=tuple(fed.batch_sizes(BATCH)),
+                          eps_th=eps_th, delta=DELTA,
+                          c_th=c_th, c1=C1, c2=C2, seed=seed)
+    state = init_state(spec, init_linear(case.dim))
     t0 = time.time()
-    out = f.train(budgets, max_rounds=max(1, k // tau),
-                  eval_fn=case.eval_fn, eval_every=1)
+    state, out = train(spec, state, fed.make_sampler(BATCH),
+                       max_rounds=max(1, k // tau),
+                       eval_fn=case.eval_fn, eval_every=1)
     if "eval_acc" not in out["best"]:
         # budgets bound before any evaluated round: score the current model
-        import jax as _jax
-        avg = _jax.tree.map(lambda x: x[0], f.params)
-        out["best"] = {**out["best"], **case.eval_fn(avg)}
+        out["best"] = {**out["best"], **case.eval_fn(eval_params(spec, state))}
     out["wall_s"] = time.time() - t0
     out["sigma"] = float(sig[0])
     out["k_planned"] = k

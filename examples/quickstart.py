@@ -1,17 +1,21 @@
 """Quickstart: DP-PASGD on the (synthetic) Adult federated split.
 
-Reproduces the paper's core loop in ~1 minute on CPU:
+Reproduces the paper's core loop in ~1 minute on CPU via the ``repro.api``
+facade:
   1. build the non-iid federation (16 devices split by education),
   2. solve the optimal design (K*, tau*, sigma*) for the budgets,
-  3. train with DP-PASGD and report accuracy + spent privacy.
+  3. declare the run as one FederationSpec, init_state, and train with
+     DP-PASGD until a budget binds — reporting accuracy + spent privacy.
+
+The engine (vmap / map / shard_map) and the topology (full_average /
+local_only ablation) are plain spec fields; swap them without touching the
+training loop.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
-
+from repro.api import FederationSpec, init_state, train
 from repro.core.convergence import ProblemConstants
 from repro.core.design import DesignProblem, ResourceModel
-from repro.core.fl import Budgets, Federation, FLConfig
 from repro.data import adult_like, split_by_group
 from repro.models.linear import init_linear, logreg_loss, make_eval_fn
 from repro.optim import sgd
@@ -37,17 +41,18 @@ print(f"   K*={sol.k}  tau*={sol.tau}  sigma*={sol.sigmas[0]:.4f}  "
       f"predicted bound={sol.predicted_bound:.4f}  cost={sol.cost:.0f}")
 
 print("== 3. train DP-PASGD until the budgets bind ==")
-cfg = FLConfig(n_clients=fed_data.n_clients, tau=sol.tau, clip_norm=CLIP,
-               dp=True)
-fed = Federation(cfg=cfg, loss_fn=logreg_loss, optimizer=sgd(LR),
-                 params0=init_linear(40),
-                 sampler=fed_data.make_sampler(BATCH),
-                 sigmas=np.asarray(sol.sigmas, np.float32),
-                 batch_sizes=fed_data.batch_sizes(BATCH))
+spec = FederationSpec(
+    n_clients=fed_data.n_clients, tau=sol.tau,
+    loss_fn=logreg_loss, optimizer=sgd(LR),
+    clip_norm=CLIP, dp=True, engine="auto",
+    sigmas=tuple(float(s) for s in sol.sigmas),
+    batch_sizes=tuple(fed_data.batch_sizes(BATCH)),
+    eps_th=EPS_TH, delta=DELTA, c_th=C_TH)
+state = init_state(spec, init_linear(40))
 xt, yt = fed_data.eval_arrays("test")
-out = fed.train(Budgets(c_th=C_TH, eps_th=EPS_TH),
-                max_rounds=sol.k // sol.tau,
-                eval_fn=make_eval_fn(logreg_loss, xt, yt))
+state, out = train(spec, state, fed_data.make_sampler(BATCH),
+                   max_rounds=sol.k // sol.tau,
+                   eval_fn=make_eval_fn(logreg_loss, xt, yt))
 print(f"   rounds={out['rounds']}  best acc={out['best'].get('eval_acc'):.4f}"
       f"  spent eps={out['max_epsilon']:.3f} (budget {EPS_TH})"
       f"  spent C={out['resource_spent']:.0f} (budget {C_TH})")

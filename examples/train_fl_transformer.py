@@ -1,12 +1,14 @@
 """End-to-end driver: federated DP-PASGD training of a ~100M-param
 transformer on the synthetic non-iid token task for a few hundred steps.
 
-This is the paper's algorithm at language-model scale: C clients each take
-tau local noisy-SGD steps on their own token distribution, then average.
-Default config (~110M params: gemma3-family, 6 layers, d=768) trains a few
-hundred iterations in roughly an hour on this CPU container; pass --tiny for
-a 2-minute sanity run. On a TPU pod the same driver + launch/dryrun.py
-shardings run the full assigned configs.
+This is the paper's algorithm at language-model scale, driven through the
+``repro.api`` facade: C clients each take tau local noisy-SGD steps on their
+own token distribution, then average. Default config (~110M params:
+gemma3-family, 6 layers, d=768) trains a few hundred iterations in roughly
+an hour on this CPU container; pass --tiny for a 2-minute sanity run. On a
+TPU pod the same driver + launch/dryrun.py shardings run the full assigned
+configs (switch the spec to ``engine="shard_map"`` for the explicit
+collective schedule).
 
 Run:  PYTHONPATH=src python examples/train_fl_transformer.py --tiny
 """
@@ -14,17 +16,19 @@ import argparse
 import time
 from dataclasses import replace
 
-import numpy as np
+import jax
 
+from repro.api import train
 from repro.configs import get_arch
 from repro.configs.base import LayerSpec, Segment
-from repro.core.fl import Budgets
 from repro.core.privacy import sigma_star
 from repro.launch.train import build_federation
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--tiny", action="store_true")
 ap.add_argument("--rounds", type=int, default=0)
+ap.add_argument("--engine", default="auto",
+                choices=("vmap", "map", "shard_map", "auto"))
 args = ap.parse_args()
 
 base = get_arch("gemma3-4b")
@@ -61,14 +65,16 @@ else:
 print(f"arch={cfg.name} clients={C} tau={tau} rounds={rounds} "
       f"sigma={sigma:.4f} (eps budget={EPS})")
 
-fed = build_federation(cfg, n_clients=C, tau=tau, batch_size=batch,
-                       seq_len=seq, sigmas=[sigma] * C, lr=0.05,
-                       clip_norm=CLIP)
-n_params = sum(x.size for x in __import__("jax").tree.leaves(fed.params)) // C
+model, spec, state, sampler = build_federation(
+    cfg, n_clients=C, tau=tau, batch_size=batch, seq_len=seq,
+    sigmas=[sigma] * C, lr=0.05, clip_norm=CLIP, delta=DELTA,
+    engine=args.engine)
+spec = spec.replace(eps_th=EPS)
+n_params = sum(x.size for x in jax.tree.leaves(state.params)) // C
 print(f"params/client: {n_params/1e6:.1f}M")
 
 t0 = time.time()
-out = fed.train(Budgets(c_th=float("inf"), eps_th=EPS), max_rounds=rounds)
+state, out = train(spec, state, sampler, max_rounds=rounds)
 losses = [h["loss"] for h in out["history"]]
 print(f"iterations={out['rounds'] * tau}  loss {losses[0]:.3f} -> "
       f"best {min(losses):.3f}  eps spent={out['max_epsilon']:.3f}  "

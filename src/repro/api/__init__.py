@@ -1,0 +1,53 @@
+"""``repro.api`` — the single public entry point for running DP-PASGD.
+
+Declarative spec, pluggable engines, pure functional state:
+
+    from repro.api import FederationSpec, init_state, run_round, train
+
+    spec = FederationSpec(n_clients=16, tau=8, loss_fn=loss, optimizer=sgd(0.3),
+                          sigmas=sigmas, batch_sizes=batch_sizes,
+                          eps_th=4.0, c_th=1000.0, engine="auto")
+    state = init_state(spec, params0)
+    state, out = train(spec, state, sampler, eval_fn=eval_fn)
+
+or drive rounds yourself with ``run_round(spec, state, batch)`` — budget
+checks (``PrivacyAccountant.peek_epsilon``) raise :class:`BudgetExceeded`
+before a round would overrun eps_th / C_th. Engines ("vmap" | "map" |
+"shard_map" | "auto") are selected purely via ``FederationSpec.engine``;
+``register_engine`` plugs in new execution strategies. The mutable
+:class:`Federation` is a back-compat wrapper over the functional core.
+"""
+from repro.api.engines import (
+    RoundEngine,
+    available_engines,
+    get_engine,
+    register_engine,
+    resolve_engine,
+    round_fn_for,
+)
+from repro.api.federation import Federation
+from repro.api.spec import ENGINES, FederationSpec
+from repro.api.state import (
+    BudgetExceeded,
+    FLState,
+    accountant_view,
+    eval_params,
+    exceeds_budgets,
+    init_state,
+    load_state,
+    max_epsilon,
+    round_batch,
+    run_round,
+    save_state,
+    train,
+)
+
+__all__ = [
+    "ENGINES", "FederationSpec",
+    "RoundEngine", "available_engines", "get_engine", "register_engine",
+    "resolve_engine", "round_fn_for",
+    "BudgetExceeded", "FLState", "accountant_view", "eval_params",
+    "exceeds_budgets", "init_state", "load_state", "max_epsilon",
+    "round_batch", "run_round", "save_state", "train",
+    "Federation",
+]

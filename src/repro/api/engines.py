@@ -1,0 +1,148 @@
+"""Pluggable round-engine registry.
+
+A *round engine* is a builder that turns a :class:`FederationSpec` into the
+unified round function
+
+    round_fn(params, opt_state, batch, key, sigmas)
+        -> (new_params, new_opt_state, metrics)
+
+with params/opt_state carrying a leading client axis C, batch leaves shaped
+(C, tau, B, ...), and sigmas (C,). Three engines ship by default:
+
+    "vmap"      GSPMD engine, clients vmapped (core/fl.py) — the default on
+                one device and the lowering used for pod-scale GSPMD runs.
+    "map"       same math with ``lax.map`` over clients (sequential; low
+                peak memory for big-model CPU simulations).
+    "shard_map" explicit collective schedule (core/fl_shard_map.py): one
+                ``lax.pmean`` over the client mesh axis per round.
+
+``register_engine`` adds new execution strategies (e.g. async or hierarchical
+aggregation) without touching the drivers: everything upstream selects purely
+via ``FederationSpec.engine``.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Protocol
+
+import jax
+import numpy as np
+
+from repro.api.spec import ENGINES, FederationSpec
+
+RoundFn = Callable[..., tuple[Any, Any, dict]]
+
+
+class RoundEngine(Protocol):
+    """Builder protocol: spec -> round_fn (uncompiled; callers jit)."""
+
+    def __call__(self, spec: FederationSpec) -> RoundFn: ...
+
+
+_REGISTRY: dict[str, RoundEngine] = {}
+
+
+def register_engine(name: str, builder: RoundEngine | None = None):
+    """Register a round-engine builder under ``name``.
+
+    Usable directly (``register_engine("x", build)``) or as a decorator
+    (``@register_engine("x")``).
+    """
+    def _add(b: RoundEngine) -> RoundEngine:
+        _REGISTRY[name] = b
+        return b
+
+    return _add if builder is None else _add(builder)
+
+
+def available_engines() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def resolve_engine(spec: FederationSpec) -> str:
+    """Map ``engine="auto"`` to a concrete engine for this process.
+
+    shard_map when >1 device can each own a whole client block; otherwise
+    the vmap GSPMD engine.
+    """
+    if spec.engine != "auto":
+        return spec.engine
+    n_dev = len(jax.devices())
+    if n_dev > 1 and _n_client_shards(spec.n_clients, n_dev) > 1:
+        return "shard_map"
+    return "vmap"
+
+
+def get_engine(name_or_spec: str | FederationSpec) -> RoundEngine:
+    """Look up an engine builder by name, or resolve it from a spec."""
+    name = (resolve_engine(name_or_spec)
+            if isinstance(name_or_spec, FederationSpec) else name_or_spec)
+    if name == "auto":
+        raise ValueError("pass a FederationSpec to resolve engine='auto'")
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown engine {name!r}; registered: "
+                       f"{available_engines()}") from None
+
+
+# ---------------------------------------------------------------------------
+# built-in engines
+# ---------------------------------------------------------------------------
+
+def _n_client_shards(n_clients: int, n_devices: int) -> int:
+    """Largest divisor of n_clients that fits in the local device count."""
+    return max(d for d in range(1, min(n_clients, n_devices) + 1)
+               if n_clients % d == 0)
+
+
+@register_engine("vmap")
+def build_vmap_engine(spec: FederationSpec) -> RoundFn:
+    from repro.core.fl import make_round_step
+    return make_round_step(spec.loss_fn, spec.optimizer,
+                           spec.fl_config(vmap_clients=True),
+                           topology=spec.topology)
+
+
+@register_engine("map")
+def build_map_engine(spec: FederationSpec) -> RoundFn:
+    from repro.core.fl import make_round_step
+    return make_round_step(spec.loss_fn, spec.optimizer,
+                           spec.fl_config(vmap_clients=False),
+                           topology=spec.topology)
+
+
+@register_engine("shard_map")
+def build_shard_map_engine(spec: FederationSpec) -> RoundFn:
+    """Explicit-collective engine on a 1-D ("client",) mesh over the local
+    devices; clients that outnumber devices are blocked per mesh slot."""
+    from jax.sharding import Mesh
+
+    from repro.core.fl_shard_map import make_shard_map_round
+    n_shards = _n_client_shards(spec.n_clients, len(jax.devices()))
+    mesh = Mesh(np.asarray(jax.devices()[:n_shards]), ("client",))
+    return make_shard_map_round(spec.loss_fn, spec.optimizer,
+                                spec.fl_config(vmap_clients=True), mesh,
+                                topology=spec.topology)
+
+
+# compiled-round cache: keyed on the engine-relevant slice of the spec, so
+# budget edits (spec.replace(eps_th=...)) reuse the compiled function.
+# Bounded LRU: engine keys hold loss/optimizer closures and XLA executables,
+# so an unbounded map would leak across spec sweeps.
+_ROUND_FN_CACHE: dict[tuple, RoundFn] = {}
+_ROUND_FN_CACHE_MAX = 32
+
+
+def round_fn_for(spec: FederationSpec) -> RoundFn:
+    """The jitted round function for ``spec`` (cached per engine key)."""
+    key = spec.engine_key()
+    fn = _ROUND_FN_CACHE.pop(key, None)
+    if fn is None:
+        fn = jax.jit(get_engine(resolve_engine(spec))(spec))
+        while len(_ROUND_FN_CACHE) >= _ROUND_FN_CACHE_MAX:
+            _ROUND_FN_CACHE.pop(next(iter(_ROUND_FN_CACHE)))
+    _ROUND_FN_CACHE[key] = fn      # (re)insert at MRU position
+    return fn
+
+
+assert set(ENGINES) - {"auto"} == set(_REGISTRY), "built-in engines drifted"

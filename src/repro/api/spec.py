@@ -1,0 +1,140 @@
+"""Declarative configuration of one DP-PASGD federation.
+
+:class:`FederationSpec` is the single configuration surface of ``repro.api``:
+it folds together the round structure (``FLConfig``), the privacy knobs
+(eps_th / delta / per-client sigmas with auto Eq.-23 design), the resource
+budgets (Eq. 8), the communication topology, and the execution engine. A
+spec is frozen and hashable, so compiled round functions are cached per
+spec and experiment sweeps are plain ``spec.replace(...)`` calls.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.core.fl import TOPOLOGIES, Budgets, FLConfig, design_sigmas
+from repro.optim.optimizers import Optimizer
+
+ENGINES = ("vmap", "map", "shard_map", "auto")
+
+
+@dataclass(frozen=True)
+class FederationSpec:
+    """Everything needed to run DP-PASGD, in one frozen declarative object.
+
+    ``loss_fn`` and ``optimizer`` are the only non-serializable fields — the
+    model plugs in through them; every other field is a plain scalar/tuple.
+    """
+    # -- federation / round structure --------------------------------------
+    n_clients: int
+    tau: int                        # local steps per round (aggregation period)
+    loss_fn: Callable[[Any, Any], Any]
+    optimizer: Optimizer
+    topology: str = "full_average"  # "full_average" | "local_only"
+    engine: str = "auto"            # "vmap" | "map" | "shard_map" | "auto"
+
+    # -- DP mechanism (Eq. 7a) ---------------------------------------------
+    dp: bool = True
+    clip_norm: float = 1.0          # G (sensitivity bound)
+    num_microbatches: int = 1
+    vmap_microbatches: bool = True
+    grad_accumulate: str = "stack"  # "stack" | "scan" (§Perf opt)
+    average_opt_state: bool = True
+
+    # -- privacy accounting (§5.2) -----------------------------------------
+    sigmas: tuple[float, ...] | None = None  # per-client σ; None -> design
+    batch_sizes: tuple[int, ...] = ()        # X_m per client; () -> all 1
+    eps_th: float = math.inf
+    delta: float = 1e-4
+    total_steps: int | None = None  # planned K for auto sigma design (Eq. 23)
+
+    # -- resource budget (Eq. 8) -------------------------------------------
+    c_th: float = math.inf
+    c1: float = 100.0               # comm cost per aggregation
+    c2: float = 1.0                 # compute cost per local step
+
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.n_clients <= 0:
+            raise ValueError(f"n_clients must be positive, got {self.n_clients}")
+        if self.tau <= 0:
+            raise ValueError(f"tau must be positive, got {self.tau}")
+        if self.topology not in TOPOLOGIES:
+            raise ValueError(f"topology must be one of {TOPOLOGIES}, "
+                             f"got {self.topology!r}")
+        if self.engine not in ENGINES:
+            raise ValueError(f"engine must be one of {ENGINES}, "
+                             f"got {self.engine!r}")
+        # normalize sequences to hashable tuples
+        if self.sigmas is not None:
+            object.__setattr__(self, "sigmas",
+                               tuple(float(s) for s in np.asarray(self.sigmas)))
+            if len(self.sigmas) != self.n_clients:
+                raise ValueError(f"sigmas has {len(self.sigmas)} entries for "
+                                 f"{self.n_clients} clients")
+        if self.batch_sizes:
+            object.__setattr__(self, "batch_sizes",
+                               tuple(int(x) for x in self.batch_sizes))
+            if len(self.batch_sizes) != self.n_clients:
+                raise ValueError(
+                    f"batch_sizes has {len(self.batch_sizes)} entries for "
+                    f"{self.n_clients} clients")
+
+    # -- derived views ------------------------------------------------------
+    def replace(self, **changes) -> "FederationSpec":
+        return dataclasses.replace(self, **changes)
+
+    def fl_config(self, vmap_clients: bool = True) -> FLConfig:
+        """The engine-level FLConfig view of this spec."""
+        return FLConfig(
+            n_clients=self.n_clients, tau=self.tau, clip_norm=self.clip_norm,
+            dp=self.dp, num_microbatches=self.num_microbatches,
+            vmap_microbatches=self.vmap_microbatches,
+            grad_accumulate=self.grad_accumulate,
+            average_opt_state=self.average_opt_state,
+            vmap_clients=vmap_clients)
+
+    def budgets(self) -> Budgets:
+        return Budgets(c_th=self.c_th, eps_th=self.eps_th,
+                       c1=self.c1, c2=self.c2)
+
+    def round_cost(self) -> float:
+        """Eq. (8) per round: c1 + c2 * tau."""
+        return self.c1 + self.c2 * self.tau
+
+    def resolved_batch_sizes(self) -> tuple[int, ...]:
+        return self.batch_sizes or (1,) * self.n_clients
+
+    def resolved_sigmas(self) -> np.ndarray:
+        """Per-client noise std: explicit > auto-designed (Eq. 23) > zero.
+
+        Auto design needs a finite ``eps_th`` and a planned ``total_steps``
+        (the K of Eq. 23); it yields the smallest noise meeting eps_th at K.
+        """
+        if self.sigmas is not None:
+            return np.asarray(self.sigmas, np.float32)
+        if not self.dp:
+            return np.zeros((self.n_clients,), np.float32)
+        if not math.isfinite(self.eps_th) or self.total_steps is None:
+            raise ValueError(
+                "FederationSpec needs explicit sigmas, or a finite eps_th "
+                "plus total_steps so Eq. 23 can design them")
+        return design_sigmas(self.total_steps, self.clip_norm,
+                             list(self.resolved_batch_sizes()),
+                             self.eps_th, self.delta)
+
+    def engine_key(self) -> tuple:
+        """Hash key of everything that shapes the compiled round function.
+
+        Budget / accounting fields (eps_th, c_th, delta, ...) are excluded —
+        changing them must NOT retrace or recompile the engine.
+        """
+        return (self.loss_fn, self.optimizer, self.n_clients, self.tau,
+                self.clip_norm, self.dp, self.num_microbatches,
+                self.vmap_microbatches, self.grad_accumulate,
+                self.average_opt_state, self.topology, self.engine)

@@ -1,0 +1,233 @@
+"""Pure functional DP-PASGD core: FLState + init_state / run_round / train.
+
+The state of a federation is one immutable :class:`FLState` value — model
+replicas, optimizer state, PRNG key, privacy-accountant snapshot, and spent
+resources. ``run_round`` maps (spec, state, batch) -> (state', metrics) with
+no hidden mutation, which makes checkpoint/resume (``save_state`` /
+``load_state``), budget probing, and jit-friendly outer drivers trivial.
+The mutable :class:`repro.api.Federation` is a thin wrapper over these
+functions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.engines import round_fn_for
+from repro.api.spec import FederationSpec
+from repro.core.privacy import PrivacyAccountant
+from repro.utils.tree import tree_broadcast_axis0, tree_mean_over_axis0
+
+
+class BudgetExceeded(RuntimeError):
+    """Raised by run_round when the next round would break a budget."""
+
+    def __init__(self, which: str, message: str):
+        super().__init__(message)
+        self.which = which          # "resource" | "privacy"
+
+
+@dataclass(frozen=True)
+class FLState:
+    """Complete training state of one federation (immutable).
+
+    params/opt_state carry the leading client axis C on every leaf. The
+    accountant snapshot (rho, steps) lives host-side as plain numpy — the
+    zCDP ledger is exact closed-form math, not traced computation.
+    """
+    params: Any
+    opt_state: Any
+    key: jax.Array                  # PRNG key consumed one split per round
+    rho: np.ndarray                 # (C,) spent zCDP per client (Lemma 1)
+    steps: int = 0                  # local iterations accounted so far
+    resource_spent: float = 0.0     # accumulated Eq.-(8) cost
+    rounds_done: int = 0
+
+    def replace(self, **changes) -> "FLState":
+        return dataclasses.replace(self, **changes)
+
+
+def init_state(spec: FederationSpec, params0: Any,
+               key: jax.Array | None = None) -> FLState:
+    """Fresh FLState: params0 (no client axis) replicated C times."""
+    params = tree_broadcast_axis0(params0, spec.n_clients)
+    opt_state = tree_broadcast_axis0(spec.optimizer.init(params0),
+                                     spec.n_clients)
+    if key is None:
+        key = jax.random.PRNGKey(spec.seed)
+    return FLState(params=params, opt_state=opt_state, key=key,
+                   rho=np.zeros((spec.n_clients,), np.float64))
+
+
+def accountant_view(spec: FederationSpec,
+                    state: FLState | None = None) -> PrivacyAccountant:
+    """A PrivacyAccountant materialized from spec (+ optional state snapshot)."""
+    acc = PrivacyAccountant(clip_norm=spec.clip_norm, delta=spec.delta)
+    sig = spec.resolved_sigmas()
+    for m, x in enumerate(spec.resolved_batch_sizes()):
+        acc.register_client(m, x, float(sig[m]))
+    if state is not None:
+        for m in range(spec.n_clients):
+            acc._rho[m] = float(state.rho[m])
+        acc.steps = state.steps
+    return acc
+
+
+def max_epsilon(spec: FederationSpec, state: FLState) -> float:
+    return accountant_view(spec, state).max_epsilon()
+
+
+def exceeds_budgets(spec: FederationSpec, state: FLState) -> str | None:
+    """Would one more round break a budget? Returns "resource" / "privacy"
+    or None. The privacy probe is ``PrivacyAccountant.peek_epsilon(tau)``."""
+    if state.resource_spent + spec.round_cost() > spec.c_th:
+        return "resource"
+    if accountant_view(spec, state).peek_epsilon(spec.tau) > spec.eps_th:
+        return "privacy"
+    return None
+
+
+def run_round(spec: FederationSpec, state: FLState, batch: Any,
+              check_budgets: bool = True) -> tuple[FLState, dict]:
+    """One DP-PASGD round (Eq. 7a-7b): tau local steps + topology collective.
+
+    batch leaves are (C, tau, B, ...). Returns the successor state and a
+    metrics record; raises :class:`BudgetExceeded` (state untouched) when
+    ``check_budgets`` and the round would overrun ``spec.c_th``/``eps_th``.
+    """
+    if check_budgets:
+        which = exceeds_budgets(spec, state)
+        if which == "resource":
+            raise BudgetExceeded("resource", f"round cost {spec.round_cost()} "
+                                 f"would exceed C_th={spec.c_th}")
+        if which == "privacy":
+            raise BudgetExceeded("privacy", f"tau={spec.tau} more steps would "
+                                 f"exceed eps_th={spec.eps_th}")
+    key, sub = jax.random.split(state.key)
+    sig = jnp.asarray(spec.resolved_sigmas(), jnp.float32)
+    new_p, new_s, ms = round_fn_for(spec)(state.params, state.opt_state,
+                                          batch, sub, sig)
+    acc = accountant_view(spec, state)
+    acc.step(spec.tau)
+    new_state = state.replace(
+        params=new_p, opt_state=new_s, key=key,
+        rho=np.asarray([acc.rho(m) for m in range(spec.n_clients)],
+                       np.float64),
+        steps=state.steps + spec.tau,
+        resource_spent=state.resource_spent + spec.round_cost(),
+        rounds_done=state.rounds_done + 1)
+    rec = {k: float(v) for k, v in ms.items()}
+    rec["round"] = new_state.rounds_done
+    rec["iterations"] = new_state.rounds_done * spec.tau
+    rec["max_epsilon"] = acc.max_epsilon()
+    rec["resource_spent"] = new_state.resource_spent
+    return new_state, rec
+
+
+# ---------------------------------------------------------------------------
+# data plumbing + budget-aware driver
+# ---------------------------------------------------------------------------
+
+def round_batch(spec: FederationSpec, sampler: Callable, rng) -> Any:
+    """Stack per-client samples into the (C, tau, B, ...) round batch.
+
+    ``sampler(client, tau, rng)`` returns one client's pytree with leading
+    axes (tau, B, ...).
+    """
+    per_client = [sampler(m, spec.tau, rng) for m in range(spec.n_clients)]
+    return jax.tree.map(lambda *xs: np.stack(xs), *per_client)
+
+
+def eval_params(spec: FederationSpec, state: FLState) -> Any:
+    """The single evaluation model: any replica after full averaging, the
+    cross-client mean under local_only."""
+    if spec.topology == "full_average":
+        return jax.tree.map(lambda x: x[0], state.params)
+    return tree_mean_over_axis0(state.params)
+
+
+def train(spec: FederationSpec, state: FLState, sampler: Callable,
+          max_rounds: int = 10_000, eval_fn: Callable | None = None,
+          eval_every: int = 1, rng=None,
+          history: list[dict] | None = None) -> tuple[FLState, dict]:
+    """Run rounds until a budget (resource or privacy) would be exceeded.
+
+    Tracks theta* = argmin of the evaluated loss (the paper uses the best
+    model among K iterations). Returns (final_state, summary) where summary
+    carries best/rounds/resource_spent/max_epsilon/history.
+    """
+    if rng is None:
+        rng = np.random.default_rng(spec.seed)
+    history = [] if history is None else history
+    best = {"loss": float("inf"), "round": 0}
+    while state.rounds_done < max_rounds:
+        if exceeds_budgets(spec, state):
+            break
+        batch = round_batch(spec, sampler, rng)
+        state, rec = run_round(spec, state, batch, check_budgets=False)
+        history.append(rec)
+        evaluated = False
+        if eval_fn is not None and state.rounds_done % eval_every == 0:
+            rec.update(eval_fn(eval_params(spec, state)))
+            evaluated = True
+        # theta* tracking: compare on eval loss when available, else train
+        if eval_fn is None:
+            crit = rec["loss"]
+        elif evaluated:
+            crit = rec["eval_loss"]
+        else:
+            crit = float("inf")
+        if crit < best["loss"]:
+            best = {"loss": crit, "round": state.rounds_done, **rec}
+    return state, {
+        "best": best, "rounds": state.rounds_done,
+        "resource_spent": state.resource_spent,
+        "max_epsilon": max_epsilon(spec, state),
+        "history": history,
+    }
+
+
+# ---------------------------------------------------------------------------
+# checkpoint / resume
+# ---------------------------------------------------------------------------
+
+def save_state(directory: str, state: FLState,
+               extra: dict | None = None) -> None:
+    """Persist an FLState (arrays + accountant snapshot) to ``directory``."""
+    from repro.checkpoint import save_checkpoint
+    meta = {
+        "rho": [float(r) for r in state.rho],
+        "steps": int(state.steps),
+        "resource_spent": float(state.resource_spent),
+        "rounds_done": int(state.rounds_done),
+        **(extra or {}),
+    }
+    save_checkpoint(directory,
+                    {"params": state.params, "opt_state": state.opt_state,
+                     "key": state.key},
+                    step=state.rounds_done, extra=meta)
+
+
+def load_state(directory: str, like: FLState) -> tuple[FLState, dict]:
+    """Restore an FLState saved by :func:`save_state`.
+
+    ``like`` supplies the pytree structure (e.g. a fresh ``init_state``).
+    Returns (state, extra) with any caller metadata passed to save_state.
+    """
+    from repro.checkpoint import load_checkpoint
+    tree, _, extra = load_checkpoint(
+        directory, like={"params": like.params, "opt_state": like.opt_state,
+                         "key": like.key})
+    state = like.replace(
+        params=tree["params"], opt_state=tree["opt_state"],
+        key=jnp.asarray(tree["key"]),
+        rho=np.asarray(extra["rho"], np.float64),
+        steps=int(extra["steps"]),
+        resource_spent=float(extra["resource_spent"]),
+        rounds_done=int(extra["rounds_done"]))
+    return state, extra

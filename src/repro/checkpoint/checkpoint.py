@@ -105,28 +105,19 @@ def load_checkpoint(directory: str, like: Any | None = None):
 
 
 def save_federation_state(directory: str, fed) -> None:
-    """Persist a core.fl.Federation: params, opt state, accountant, history."""
-    extra = {
-        "rounds_done": fed.rounds_done,
-        "resource_spent": fed.resource_spent,
-        "rho": {str(k): v for k, v in fed.accountant._rho.items()},
-        "accountant_steps": fed.accountant.steps,
-        "sigmas": np.asarray(fed.sigmas).tolist(),
-        "history": fed.history,
-    }
-    save_checkpoint(directory, {"params": fed.params,
-                                "opt_state": fed.opt_state},
-                    step=fed.rounds_done, extra=extra)
+    """Persist a repro.api.Federation: its FLState + sigmas and history.
+
+    Thin sugar over ``repro.api.save_state`` (which handles the arrays and
+    the accountant snapshot); use that directly for functional drivers.
+    """
+    from repro.api.state import save_state
+    save_state(directory, fed.state,
+               extra={"sigmas": np.asarray(fed.sigmas).tolist(),
+                      "history": fed.history})
 
 
 def load_federation_state(directory: str, fed) -> None:
-    state, _, extra = load_checkpoint(
-        directory, like={"params": fed.params, "opt_state": fed.opt_state})
-    fed.params = state["params"]
-    fed.opt_state = state["opt_state"]
-    fed.rounds_done = extra["rounds_done"]
-    fed.resource_spent = extra["resource_spent"]
-    fed.accountant.steps = extra["accountant_steps"]
-    for k, v in extra["rho"].items():
-        fed.accountant._rho[int(k)] = v
-    fed.history = extra["history"]
+    """Restore a Federation saved by :func:`save_federation_state`."""
+    from repro.api.state import load_state
+    state, extra = load_state(directory, fed.state)
+    fed.restore(state, history=extra.get("history"))

@@ -6,7 +6,7 @@ from repro.core.design import (
     ResourceModel,
     grid_search_reference,
 )
-from repro.core.fl import Budgets, Federation, FLConfig, design_sigmas, make_round_step
+from repro.core.fl import Budgets, FLConfig, design_sigmas, make_round_step
 from repro.core.privacy import (
     PrivacyAccountant,
     compose_zcdp,
@@ -26,3 +26,12 @@ __all__ = [
     "PrivacyAccountant", "compose_zcdp", "epsilon_after_k", "gaussian_zcdp",
     "grad_sensitivity", "privacy_z", "sigma_star", "zcdp_to_dp",
 ]
+
+
+def __getattr__(name):
+    # Federation now lives in repro.api (thin wrapper over the functional
+    # core); re-exported lazily to break the core <-> api import cycle.
+    if name == "Federation":
+        from repro.api.federation import Federation
+        return Federation
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -9,26 +9,37 @@ GSPMD lowers the round-boundary mean to exactly one all-reduce over the
 client (and pod) axis.
 
 The engine is generic over the model: it only needs ``loss_fn(params, batch)``.
-It powers both the paper-scale experiments (logreg / SVM, 16–23 clients on
-CPU) and the pod-scale transformer runs (clients = mesh slabs).
+The fully-local ablation (no averaging) is the same builder with
+``topology="local_only"``; the explicit-collective variant lives in
+``core/fl_shard_map.py``.
+
+This module is the low-level building block. **New code should go through
+``repro.api``** — a declarative :class:`repro.api.FederationSpec` selects
+between this builder (engines ``"vmap"``/``"map"``), the shard_map variant
+(engine ``"shard_map"``), and the topology, and the pure-functional
+``init_state``/``run_round`` drive training. The mutable
+:class:`repro.api.Federation` (re-exported here for back-compat) is a thin
+wrapper over that functional core.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Any, Callable
+from dataclasses import dataclass
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.clipping import make_dp_grad_fn, make_plain_grad_fn
-from repro.core.privacy import PrivacyAccountant, sigma_star
+from repro.core.privacy import sigma_star
 from repro.optim.optimizers import Optimizer
 from repro.utils.tree import (
     tree_add,
     tree_broadcast_axis0,
     tree_mean_over_axis0,
 )
+
+TOPOLOGIES = ("full_average", "local_only")
 
 
 @dataclass(frozen=True)
@@ -45,69 +56,23 @@ class FLConfig:
     vmap_clients: bool = True     # False -> lax.map (sequential clients; CPU sims)
 
 
-def make_round_step(loss_fn: Callable, optimizer: Optimizer, cfg: FLConfig):
-    """Build ``round_step(params, opt_state, batch, key, sigmas)``.
+def make_grad_fn(loss_fn: Callable, cfg: FLConfig) -> Callable:
+    """The per-step gradient: DP (clip + noise, Eq. 7a) or plain."""
+    if cfg.dp:
+        return make_dp_grad_fn(loss_fn, cfg.clip_norm, cfg.num_microbatches,
+                               cfg.vmap_microbatches, cfg.grad_accumulate)
+    return make_plain_grad_fn(loss_fn)
 
-    params/opt_state : pytrees with leading client axis C on every leaf
-    batch            : pytree with leading axes (C, tau, local_batch, ...)
-    sigmas           : (C,) per-client per-step noise std (traced; Eq. 23)
-    returns          : (new_params, new_opt_state, metrics)
+
+def make_local_round(grad_fn: Callable, optimizer: Optimizer, tau: int):
+    """tau local DP-SGD steps of ONE client (Eq. 7a). No collectives.
+
+    Returns ``local_round(params, opt_state, batches, key, sigma)`` ->
+    ``(params, opt_state, metrics)`` with metrics averaged over the tau steps.
+    Shared by the GSPMD/vmap engines here and the shard_map engine.
     """
-    if cfg.dp:
-        grad_fn = make_dp_grad_fn(loss_fn, cfg.clip_norm, cfg.num_microbatches,
-                                  cfg.vmap_microbatches, cfg.grad_accumulate)
-    else:
-        grad_fn = make_plain_grad_fn(loss_fn)
-
     def local_round(params, opt_state, batches, key, sigma):
-        """tau local DP-SGD steps of ONE client (Eq. 7a). No collectives."""
-        keys = jax.random.split(key, cfg.tau)
-
-        def step(carry, inp):
-            p, s = carry
-            mb, k = inp
-            g, metrics = grad_fn(p, mb, k, sigma)
-            upd, s = optimizer.update(g, s, p)
-            p = tree_add(p, upd)
-            return (p, s), metrics
-
-        (params, opt_state), ms = jax.lax.scan(step, (params, opt_state),
-                                               (batches, keys))
-        # mean metrics over the tau local steps
-        ms = jax.tree.map(lambda x: jnp.mean(x), ms)
-        return params, opt_state, ms
-
-    def round_step(params, opt_state, batch, key, sigmas):
-        keys = jax.random.split(key, cfg.n_clients)
-        if cfg.vmap_clients:
-            new_p, new_s, ms = jax.vmap(local_round)(params, opt_state, batch,
-                                                     keys, sigmas)
-        else:
-            new_p, new_s, ms = jax.lax.map(
-                lambda args: local_round(*args),
-                (params, opt_state, batch, keys, sigmas))
-        # ---- Eq. (7b): periodic global averaging -------------------------
-        avg = tree_mean_over_axis0(new_p)
-        new_p = tree_broadcast_axis0(avg, cfg.n_clients)
-        if cfg.average_opt_state:
-            new_s = tree_broadcast_axis0(tree_mean_over_axis0(new_s),
-                                         cfg.n_clients)
-        ms = jax.tree.map(lambda x: jnp.mean(x), ms)
-        return new_p, new_s, ms
-
-    return round_step
-
-
-def make_local_steps_only(loss_fn: Callable, optimizer: Optimizer, cfg: FLConfig):
-    """Round WITHOUT the averaging step (ablation: fully-local training)."""
-    if cfg.dp:
-        grad_fn = make_dp_grad_fn(loss_fn, cfg.clip_norm, cfg.num_microbatches,
-                                  cfg.vmap_microbatches)
-    else:
-        grad_fn = make_plain_grad_fn(loss_fn)
-
-    def local_round(params, opt_state, batches, key, sigma):
-        keys = jax.random.split(key, cfg.tau)
+        keys = jax.random.split(key, tau)
 
         def step(carry, inp):
             p, s = carry
@@ -120,18 +85,48 @@ def make_local_steps_only(loss_fn: Callable, optimizer: Optimizer, cfg: FLConfig
                                                (batches, keys))
         return params, opt_state, jax.tree.map(jnp.mean, ms)
 
+    return local_round
+
+
+def make_round_step(loss_fn: Callable, optimizer: Optimizer, cfg: FLConfig,
+                    topology: str = "full_average"):
+    """Build ``round_step(params, opt_state, batch, key, sigmas)``.
+
+    params/opt_state : pytrees with leading client axis C on every leaf
+    batch            : pytree with leading axes (C, tau, local_batch, ...)
+    sigmas           : (C,) per-client per-step noise std (traced; Eq. 23)
+    topology         : "full_average" (Eq. 7b averaging each round) or
+                       "local_only" (ablation: fully-local training, no
+                       cross-client communication ever)
+    returns          : (new_params, new_opt_state, metrics)
+    """
+    if topology not in TOPOLOGIES:
+        raise ValueError(f"topology must be one of {TOPOLOGIES}, "
+                         f"got {topology!r}")
+    local_round = make_local_round(make_grad_fn(loss_fn, cfg), optimizer,
+                                   cfg.tau)
+
     def round_step(params, opt_state, batch, key, sigmas):
         keys = jax.random.split(key, cfg.n_clients)
-        new_p, new_s, ms = jax.vmap(local_round)(params, opt_state, batch, keys,
-                                                 sigmas)
-        return new_p, new_s, jax.tree.map(jnp.mean, ms)
+        if cfg.vmap_clients:
+            new_p, new_s, ms = jax.vmap(local_round)(params, opt_state, batch,
+                                                     keys, sigmas)
+        else:
+            new_p, new_s, ms = jax.lax.map(
+                lambda args: local_round(*args),
+                (params, opt_state, batch, keys, sigmas))
+        if topology == "full_average":
+            # ---- Eq. (7b): periodic global averaging ----------------------
+            avg = tree_mean_over_axis0(new_p)
+            new_p = tree_broadcast_axis0(avg, cfg.n_clients)
+            if cfg.average_opt_state:
+                new_s = tree_broadcast_axis0(tree_mean_over_axis0(new_s),
+                                             cfg.n_clients)
+        ms = jax.tree.map(jnp.mean, ms)
+        return new_p, new_s, ms
 
     return round_step
 
-
-# ---------------------------------------------------------------------------
-# Federation driver: budget-aware training loop used by the paper experiments.
-# ---------------------------------------------------------------------------
 
 @dataclass
 class Budgets:
@@ -142,113 +137,17 @@ class Budgets:
     c2: float = 1.0                # compute cost / local step
 
 
-@dataclass
-class Federation:
-    """Coordinates clients, the round step, and the privacy accountant.
-
-    ``sampler(client, tau, rng) -> batch pytree with leading axes (tau, B)``
-    """
-    cfg: FLConfig
-    loss_fn: Callable
-    optimizer: Optimizer
-    params0: Any                              # single-replica init (no C axis)
-    sampler: Callable[[int, int, np.random.Generator], Any]
-    sigmas: np.ndarray                        # (C,) per-step noise std
-    delta: float = 1e-4
-    batch_sizes: list[int] = field(default_factory=list)  # X_m per client
-    seed: int = 0
-
-    def __post_init__(self):
-        c = self.cfg.n_clients
-        self.params = tree_broadcast_axis0(self.params0, c)
-        opt0 = self.optimizer.init(self.params0)
-        self.opt_state = tree_broadcast_axis0(opt0, c)
-        self.accountant = PrivacyAccountant(clip_norm=self.cfg.clip_norm,
-                                            delta=self.delta)
-        for m in range(c):
-            bs = self.batch_sizes[m] if self.batch_sizes else 1
-            self.accountant.register_client(m, bs, float(self.sigmas[m]))
-        self._round_step = jax.jit(
-            make_round_step(self.loss_fn, self.optimizer, self.cfg))
-        self._rng = np.random.default_rng(self.seed)
-        self._key = jax.random.PRNGKey(self.seed)
-        self.resource_spent = 0.0
-        self.rounds_done = 0
-        self.history: list[dict] = []
-
-    # -- data --------------------------------------------------------------
-    def _round_batch(self):
-        per_client = [self.sampler(m, self.cfg.tau, self._rng)
-                      for m in range(self.cfg.n_clients)]
-        return jax.tree.map(lambda *xs: np.stack(xs), *per_client)
-
-    # -- training ----------------------------------------------------------
-    def round(self) -> dict:
-        batch = self._round_batch()
-        self._key, sub = jax.random.split(self._key)
-        sig = jnp.asarray(self.sigmas, jnp.float32)
-        self.params, self.opt_state, ms = self._round_step(
-            self.params, self.opt_state, batch, sub, sig)
-        self.accountant.step(self.cfg.tau)
-        self.rounds_done += 1
-        rec = {k: float(v) for k, v in ms.items()}
-        rec["round"] = self.rounds_done
-        rec["iterations"] = self.rounds_done * self.cfg.tau
-        rec["max_epsilon"] = self.accountant.max_epsilon()
-        self.history.append(rec)
-        return rec
-
-    def round_cost(self, budgets: Budgets) -> float:
-        """Eq. (8) per round: c1 + c2 * tau."""
-        return budgets.c1 + budgets.c2 * self.cfg.tau
-
-    def train(self, budgets: Budgets, max_rounds: int = 10_000,
-              eval_fn: Callable | None = None, eval_every: int = 1) -> dict:
-        """Run rounds until a budget (resource or privacy) would be exceeded.
-
-        Tracks theta* = argmin of the evaluated loss (paper uses the best
-        model among K iterations).
-        """
-        best = {"loss": float("inf"), "round": 0}
-        while self.rounds_done < max_rounds:
-            nxt_cost = self.resource_spent + self.round_cost(budgets)
-            if nxt_cost > budgets.c_th:
-                break
-            # peek privacy after tau more steps on a copy
-            probe = max(
-                (self.accountant.rho(m)
-                 + self.cfg.tau * 2 * self.cfg.clip_norm ** 2
-                 / (self.accountant.batch_sizes[m] ** 2
-                    * max(self.accountant.sigmas[m], 1e-30) ** 2))
-                for m in self.accountant.batch_sizes)
-            from repro.core.privacy import zcdp_to_dp
-            if zcdp_to_dp(probe, self.delta) > budgets.eps_th:
-                break
-            rec = self.round()
-            self.resource_spent = nxt_cost
-            rec["resource_spent"] = self.resource_spent
-            evaluated = False
-            if eval_fn is not None and self.rounds_done % eval_every == 0:
-                avg_params = jax.tree.map(lambda x: x[0], self.params)
-                rec.update(eval_fn(avg_params))
-                evaluated = True
-            # theta* tracking: compare on eval loss when available, else train
-            if eval_fn is None:
-                crit = rec["loss"]
-            elif evaluated:
-                crit = rec["eval_loss"]
-            else:
-                crit = float("inf")
-            if crit < best["loss"]:
-                best = {"loss": crit, "round": self.rounds_done, **rec}
-        return {"best": best, "rounds": self.rounds_done,
-                "resource_spent": self.resource_spent,
-                "max_epsilon": self.accountant.max_epsilon(),
-                "history": self.history}
-
-
 def design_sigmas(k: int, clip_norm: float, batch_sizes: list[int],
                   eps_th: float, delta: float) -> np.ndarray:
     """Vector of Eq.-(23) optimal noise levels, one per client."""
     return np.asarray([sigma_star(k, clip_norm, x, eps_th, delta)
                        for x in batch_sizes], dtype=np.float32)
+
+
+def __getattr__(name: str):
+    # Back-compat: the stateful driver now lives in repro.api as a thin
+    # wrapper over the functional core (imported lazily to avoid a cycle).
+    if name == "Federation":
+        from repro.api.federation import Federation
+        return Federation
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -2,12 +2,19 @@
 
 The GSPMD engine in core/fl.py lets the partitioner place the round-boundary
 all-reduce. This variant instead expresses the schedule explicitly with
-``jax.shard_map``: each mesh slot along the ``client`` axis owns its replica,
-runs tau local noisy-SGD steps with ZERO collectives, then one
+``jax.shard_map``: each mesh slot along the ``client`` axis owns a contiguous
+*block* of ``n_clients / mesh.shape[client]`` model replicas, runs tau local
+noisy-SGD steps per replica with ZERO collectives, then one
 ``jax.lax.pmean`` over the client axis is the aggregation — byte-for-byte
 the paper's protocol, and the single point where cross-client traffic can
-exist. Used for the paper-scale (replicated-model) experiments and as the
-reference collective schedule for the GSPMD lowering.
+exist. With fewer devices than clients the block is vmapped locally, so the
+same engine runs 23-client CPU simulations and pod-scale slab-per-client
+runs unchanged.
+
+**New code should select this engine via ``repro.api``**
+(``FederationSpec(engine="shard_map")``) rather than calling
+:func:`make_shard_map_round` directly; the facade builds the client mesh and
+unifies the call signature with the GSPMD engines.
 """
 from __future__ import annotations
 
@@ -17,63 +24,69 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.clipping import make_dp_grad_fn, make_plain_grad_fn
-from repro.core.fl import FLConfig
+from repro.core.fl import FLConfig, TOPOLOGIES, make_grad_fn, make_local_round
 from repro.optim.optimizers import Optimizer
-from repro.utils.tree import tree_add
+from repro.utils.tree import tree_broadcast_axis0
+
+
+def _shard_map(f, mesh, in_specs, out_specs):
+    """shard_map across jax versions: jax.shard_map (>=0.6, check_vma) or
+    jax.experimental.shard_map (0.4.x, check_rep). Replication checking is
+    disabled either way — the out_specs deliberately mix P(client) and P()."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
 
 
 def make_shard_map_round(loss_fn: Callable, optimizer: Optimizer,
                          cfg: FLConfig, mesh: Mesh,
-                         client_axis: str = "client"):
+                         client_axis: str = "client",
+                         topology: str = "full_average"):
     """Build round_step(params, opt_state, batch, key, sigmas) on ``mesh``.
 
     params/opt_state carry a leading client axis sharded over ``client_axis``
-    (local view inside the shard_map has leading dim 1). batch leaves are
-    (C, tau, B, ...); sigmas is (C,).
+    (local view inside the shard_map has leading dim n_clients / n_shards).
+    batch leaves are (C, tau, B, ...); sigmas is (C,).
     """
-    if cfg.dp:
-        grad_fn = make_dp_grad_fn(loss_fn, cfg.clip_norm,
-                                  cfg.num_microbatches,
-                                  cfg.vmap_microbatches, cfg.grad_accumulate)
-    else:
-        grad_fn = make_plain_grad_fn(loss_fn)
+    if topology not in TOPOLOGIES:
+        raise ValueError(f"topology must be one of {TOPOLOGIES}, "
+                         f"got {topology!r}")
+    n_shards = mesh.shape[client_axis]
+    if cfg.n_clients % n_shards:
+        raise ValueError(f"{cfg.n_clients} clients do not divide over "
+                         f"{n_shards} '{client_axis}' mesh slots")
+    block = cfg.n_clients // n_shards
+    local_round = make_local_round(make_grad_fn(loss_fn, cfg), optimizer,
+                                   cfg.tau)
 
-    def per_client(params, opt_state, batches, keys, sigma):
-        """Local view: leading axis 1 (this client's shard)."""
-        squeeze = lambda t: jax.tree.map(lambda x: x[0], t)
-        params, opt_state = squeeze(params), squeeze(opt_state)
-        batches, sigma = squeeze(batches), sigma[0]
-        step_keys = jax.random.split(keys[0], cfg.tau)
-
-        def step(carry, inp):
-            p, s = carry
-            mb, k = inp
-            g, metrics = grad_fn(p, mb, k, sigma)
-            upd, s = optimizer.update(g, s, p)
-            return (tree_add(p, upd), s), metrics
-
-        (params, opt_state), ms = jax.lax.scan(step, (params, opt_state),
-                                               (batches, step_keys))
-        # ---- Eq. (7b): THE collective — one pmean over the client axis ----
-        params = jax.tree.map(
-            lambda x: jax.lax.pmean(x, axis_name=client_axis), params)
-        if cfg.average_opt_state:
-            opt_state = jax.tree.map(
-                lambda x: jax.lax.pmean(x.astype(jnp.float32),
-                                        axis_name=client_axis
-                                        ).astype(x.dtype), opt_state)
-        ms = jax.tree.map(lambda x: jax.lax.pmean(jnp.mean(x), client_axis),
-                          ms)
-        unsq = lambda t: jax.tree.map(lambda x: x[None], t)
-        return unsq(params), unsq(opt_state), ms
+    def per_shard(params, opt_state, batches, keys, sigmas):
+        """Local view: leading axis = block (this slot's client replicas)."""
+        new_p, new_s, ms = jax.vmap(local_round)(params, opt_state, batches,
+                                                 keys, sigmas)
+        ms = jax.tree.map(jnp.mean, ms)         # mean over the local block
+        if topology == "full_average":
+            # ---- Eq. (7b): THE collective — one pmean over the client axis
+            # (local block mean first, so the pmean moves C/n_shards fewer
+            # bytes than an all-gather would).
+            pmean = lambda x: jax.lax.pmean(x, axis_name=client_axis)
+            avg = jax.tree.map(lambda x: pmean(jnp.mean(x, axis=0)), new_p)
+            new_p = tree_broadcast_axis0(avg, block)
+            if cfg.average_opt_state:
+                avg_s = jax.tree.map(
+                    lambda x: pmean(jnp.mean(x.astype(jnp.float32), axis=0)
+                                    ).astype(x.dtype), new_s)
+                new_s = tree_broadcast_axis0(avg_s, block)
+        ms = jax.tree.map(lambda x: jax.lax.pmean(x, client_axis), ms)
+        return new_p, new_s, ms
 
     cspec = P(client_axis)
-    smapped = jax.shard_map(
-        per_client, mesh=mesh,
+    smapped = _shard_map(
+        per_shard, mesh,
         in_specs=(cspec, cspec, cspec, cspec, cspec),
-        out_specs=(cspec, cspec, P()),
-        check_vma=False)
+        out_specs=(cspec, cspec, P()))
 
     def round_step(params, opt_state, batch, key, sigmas):
         keys = jax.random.split(key, cfg.n_clients)

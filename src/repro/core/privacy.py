@@ -127,6 +127,26 @@ class PrivacyAccountant:
             return 0.0
         return max(self.epsilon(m) for m in self._rho)
 
+    def peek_epsilon(self, extra_steps: int = 0) -> float:
+        """Worst-client eps if every client took ``extra_steps`` more local
+        iterations — WITHOUT mutating the accountant.
+
+        This is the pre-round probe of the budget-aware training loop: run
+        the next round only if ``peek_epsilon(tau) <= eps_th``. rho composes
+        additively (Lemma 1) and Lemma 3 is monotone in rho, so the max can
+        be taken in rho-space before the single conversion.
+        """
+        if extra_steps < 0:
+            raise ValueError("extra_steps must be >= 0")
+        if not self.batch_sizes:
+            return 0.0
+        worst_rho = max(
+            self._rho.get(m, 0.0)
+            + extra_steps * gaussian_zcdp(grad_sensitivity(self.clip_norm, x),
+                                          self.sigmas[m])
+            for m, x in self.batch_sizes.items())
+        return zcdp_to_dp(worst_rho, self.delta)
+
     def remaining_steps(self, client: int, eps_th: float) -> int:
         """How many more local steps client m can take before exceeding eps_th."""
         x, s = self.batch_sizes[client], self.sigmas[client]

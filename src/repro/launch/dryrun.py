@@ -24,7 +24,7 @@ from repro.configs import (
     input_specs,
     supports_shape,
 )
-from repro.core.fl import FLConfig, make_round_step
+from repro.api import FederationSpec, get_engine
 from repro.launch.mesh import (
     default_n_clients,
     make_federated_mesh,
@@ -123,10 +123,12 @@ def lower_train(cfg, shape, mesh, n_clients: int, tau: int, lr: float = 0.1,
 
     replica = fed_mesh.shape["replica"]
     n_mb = microbatches or _auto_microbatches(cfg, shape, n_clients, replica)
-    flcfg = FLConfig(n_clients=n_clients, tau=tau, clip_norm=1.0, dp=True,
-                     num_microbatches=n_mb, vmap_microbatches=False,
-                     grad_accumulate=grad_accumulate)
-    round_step = make_round_step(model.loss_fn, opt, flcfg)
+    spec = FederationSpec(n_clients=n_clients, tau=tau, loss_fn=model.loss_fn,
+                          optimizer=opt, engine="vmap", clip_norm=1.0,
+                          dp=True, num_microbatches=n_mb,
+                          vmap_microbatches=False,
+                          grad_accumulate=grad_accumulate)
+    round_step = get_engine("vmap")(spec)
 
     rules = train_rules()
     if gather_weights:

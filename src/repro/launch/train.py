@@ -1,9 +1,10 @@
-"""End-to-end DP-PASGD training launcher.
+"""End-to-end DP-PASGD training launcher, driven by ``repro.api``.
 
 Runs real training (allocates params) — use reduced/smoke configs or the
 ~100M example config on CPU; on a TPU pod the same driver runs the full
 configs. The optimal-design solver (paper §7) can pick (K, tau, sigma) from
-resource/privacy budgets before launch.
+resource/privacy budgets before launch. The engine (vmap / map / shard_map)
+is selected declaratively via ``FederationSpec.engine``.
 
     PYTHONPATH=src python -m repro.launch.train --arch gemma3-4b --smoke \
         --rounds 5 --clients 4 --tau 5 --eps 10 --cth 2000
@@ -15,22 +16,27 @@ import json
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro.api import FederationSpec, init_state, save_state, train
 from repro.configs import get_arch, smoke_variant
 from repro.core.convergence import ProblemConstants
 from repro.core.design import DesignProblem, ResourceModel
-from repro.core.fl import Budgets, Federation, FLConfig, design_sigmas
+from repro.core.fl import design_sigmas
 from repro.data.tokens import FederatedTokenStream, TokenTaskConfig
 from repro.models.transformer import Transformer
 from repro.optim import sgd
-from repro.checkpoint import save_federation_state
 
 
 def build_federation(cfg, n_clients: int, tau: int, batch_size: int,
                      seq_len: int, sigmas, lr: float = 0.1,
-                     clip_norm: float = 1.0, seed: int = 0) -> Federation:
+                     clip_norm: float = 1.0, delta: float = 1e-4,
+                     engine: str = "auto", seed: int = 0):
+    """Assemble the repro.api handles for a transformer federation.
+
+    Returns ``(model, spec, state, sampler)`` — drive them with
+    ``repro.api.train(spec, state, sampler, ...)``.
+    """
     model = Transformer(cfg)
     task = TokenTaskConfig(vocab=cfg.vocab, seq_len=seq_len,
                            n_clients=n_clients, seed=seed)
@@ -38,15 +44,14 @@ def build_federation(cfg, n_clients: int, tau: int, batch_size: int,
                                   prefix_len=cfg.prefix_len,
                                   d_model=cfg.d_model)
     params0 = model.init(jax.random.PRNGKey(seed))
-    flcfg = FLConfig(n_clients=n_clients, tau=tau, clip_norm=clip_norm,
-                     dp=True, num_microbatches=1)
-    fed = Federation(
-        cfg=flcfg, loss_fn=model.loss_fn, optimizer=sgd(lr),
-        params0=params0, sampler=stream.sampler,
-        sigmas=np.asarray(sigmas, np.float32),
-        batch_sizes=[batch_size] * n_clients, seed=seed)
-    fed.model = model
-    return fed
+    spec = FederationSpec(
+        n_clients=n_clients, tau=tau, loss_fn=model.loss_fn,
+        optimizer=sgd(lr), engine=engine, dp=True, clip_norm=clip_norm,
+        num_microbatches=1,
+        sigmas=tuple(float(s) for s in np.asarray(sigmas)),
+        batch_sizes=(batch_size,) * n_clients, delta=delta, seed=seed)
+    state = init_state(spec, params0)
+    return model, spec, state, stream.sampler
 
 
 def main(argv=None):
@@ -67,6 +72,8 @@ def main(argv=None):
     ap.add_argument("--cth", type=float, default=2000.0)
     ap.add_argument("--c1", type=float, default=100.0)
     ap.add_argument("--c2", type=float, default=1.0)
+    ap.add_argument("--engine", default="auto",
+                    choices=("vmap", "map", "shard_map", "auto"))
     ap.add_argument("--save", default=None)
     args = ap.parse_args(argv)
 
@@ -92,11 +99,13 @@ def main(argv=None):
         print(f"[design] K*={sol.k} tau*={tau} sigma*={sigmas[0]:.4f} "
               f"bound={sol.predicted_bound:.4f} cost={sol.cost:.0f}")
 
-    fed = build_federation(cfg, args.clients, tau, args.batch, args.seq,
-                           sigmas, lr=args.lr, clip_norm=args.clip)
-    budgets = Budgets(c_th=args.cth, eps_th=args.eps, c1=args.c1, c2=args.c2)
+    model, spec, state, sampler = build_federation(
+        cfg, args.clients, tau, args.batch, args.seq, sigmas, lr=args.lr,
+        clip_norm=args.clip, delta=args.delta, engine=args.engine)
+    spec = spec.replace(eps_th=args.eps, c_th=args.cth,
+                        c1=args.c1, c2=args.c2)
     t0 = time.time()
-    out = fed.train(budgets, max_rounds=args.rounds)
+    state, out = train(spec, state, sampler, max_rounds=args.rounds)
     dt = time.time() - t0
     print(json.dumps({
         "arch": cfg.name, "rounds": out["rounds"],
@@ -106,7 +115,7 @@ def main(argv=None):
         "wall_s": round(dt, 1),
     }, indent=2))
     if args.save:
-        save_federation_state(args.save, fed)
+        save_state(args.save, state, extra={"history": out["history"]})
         print(f"saved federation state to {args.save}")
     return 0
 

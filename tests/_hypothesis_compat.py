@@ -1,0 +1,117 @@
+"""Fallback property-testing shim used when `hypothesis` is not installed.
+
+The test suite uses a small slice of the hypothesis API:
+
+    @settings(max_examples=N, deadline=None)
+    @given(k=st.integers(lo, hi), x=st.floats(lo, hi))
+    def test_...(k, x): ...
+
+When the real package is available, ``install()`` is a no-op and the tests
+run under genuine hypothesis shrinking. When it is missing, ``install()``
+registers stand-in ``hypothesis`` / ``hypothesis.strategies`` modules that
+replay a deterministic sample of the strategy space (bounds first, then
+seeded uniform draws), so the suite still collects and exercises every
+property — just without adaptive search.
+"""
+from __future__ import annotations
+
+import sys
+import types
+
+import numpy as np
+
+# Cap replay count: the shim has no shrinking, so hundreds of uniform draws
+# add runtime without adding much coverage beyond the bounds + interior mix.
+_MAX_REPLAY = 25
+_DEFAULT_EXAMPLES = 20
+
+
+class _Strategy:
+    """A bounded scalar strategy: deterministic boundary + seeded draws."""
+
+    def __init__(self, draw, bounds=()):
+        self._draw = draw
+        self._bounds = tuple(bounds)
+
+    def examples(self, n: int, rng: np.random.Generator):
+        out = list(self._bounds[:n])
+        while len(out) < n:
+            out.append(self._draw(rng))
+        return out
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    lo, hi = int(min_value), int(max_value)
+    return _Strategy(lambda rng: int(rng.integers(lo, hi + 1)),
+                     bounds=(lo, hi) if lo != hi else (lo,))
+
+
+def floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+    lo, hi = float(min_value), float(max_value)
+    return _Strategy(lambda rng: float(rng.uniform(lo, hi)),
+                     bounds=(lo, hi) if lo != hi else (lo,))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.integers(0, 2)), bounds=(False, True))
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[int(rng.integers(len(elements)))],
+                     bounds=elements)
+
+
+def given(*args, **strategies):
+    if args:
+        raise NotImplementedError(
+            "_hypothesis_compat only supports keyword strategies")
+
+    def deco(fn):
+        def wrapper():
+            n = min(getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES),
+                    _MAX_REPLAY)
+            rng = np.random.default_rng(0)
+            cols = {k: s.examples(n, rng) for k, s in strategies.items()}
+            for i in range(n):
+                fn(**{k: v[i] for k, v in cols.items()})
+        # NOT functools.wraps: __wrapped__ would expose fn's signature and
+        # make pytest resolve the strategy kwargs as fixtures
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return deco
+
+
+def settings(max_examples: int | None = None, deadline=None, **_kw):
+    def deco(fn):
+        if max_examples is not None:
+            fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def install() -> bool:
+    """Register the shim under ``hypothesis`` if the real package is absent.
+
+    Returns True when the shim was installed, False when real hypothesis is
+    already importable.
+    """
+    try:
+        import hypothesis  # noqa: F401
+        return False
+    except ModuleNotFoundError:
+        pass
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "sampled_from"):
+        setattr(st_mod, name, globals()[name])
+    mod.strategies = st_mod
+    mod.__is_compat_shim__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st_mod
+    return True

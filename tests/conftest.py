@@ -1,0 +1,5 @@
+"""Suite-wide setup: make `from hypothesis import ...` work with or without
+the real package installed (see tests/_hypothesis_compat.py)."""
+import _hypothesis_compat
+
+_hypothesis_compat.install()

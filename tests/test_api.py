@@ -1,0 +1,237 @@
+"""Tests for the repro.api facade: FederationSpec, the round-engine
+registry, the pure functional FLState core, and checkpoint/restore."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (
+    BudgetExceeded,
+    FederationSpec,
+    FLState,
+    Federation,
+    available_engines,
+    get_engine,
+    init_state,
+    load_state,
+    register_engine,
+    round_batch,
+    run_round,
+    save_state,
+    train,
+)
+from repro.core.fl import Budgets, FLConfig
+from repro.data import adult_like, split_iid
+from repro.models.linear import init_linear, logreg_loss, make_eval_fn
+from repro.optim import sgd
+
+C, TAU, DIM, B = 4, 3, 8, 4
+
+
+def _spec(**kw):
+    base = dict(n_clients=C, tau=TAU, loss_fn=logreg_loss, optimizer=sgd(0.2),
+                clip_norm=1.0, dp=True, sigmas=(0.5,) * C,
+                batch_sizes=(B,) * C)
+    base.update(kw)
+    return FederationSpec(**base)
+
+
+def _batch(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"x": jnp.asarray(rng.normal(size=(C, TAU, B, DIM)), jnp.float32),
+            "y": jnp.asarray(rng.integers(0, 2, size=(C, TAU, B)), jnp.int32)}
+
+
+def _sampler(m, tau, rng):
+    return {"x": rng.normal(size=(tau, B, DIM)).astype(np.float32),
+            "y": rng.integers(0, 2, size=(tau, B)).astype(np.int32)}
+
+
+# ---------------------------- spec ------------------------------------------
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        _spec(engine="bogus")
+    with pytest.raises(ValueError):
+        _spec(topology="bogus")
+    with pytest.raises(ValueError):
+        _spec(sigmas=(0.5,))            # wrong length
+    with pytest.raises(ValueError):
+        _spec(tau=0)
+
+
+def test_spec_budget_edit_keeps_engine_key():
+    s = _spec()
+    assert s.replace(eps_th=4.0, c_th=100.0).engine_key() == s.engine_key()
+    assert s.replace(tau=TAU + 1).engine_key() != s.engine_key()
+
+
+def test_spec_auto_sigma_design():
+    s = _spec(sigmas=None, eps_th=4.0, total_steps=120)
+    sig = s.resolved_sigmas()
+    assert sig.shape == (C,) and (sig > 0).all()
+    from repro.core.privacy import epsilon_after_k
+    assert epsilon_after_k(120, s.clip_norm, B, float(sig[0]),
+                           s.delta) == pytest.approx(4.0, rel=1e-5)
+    with pytest.raises(ValueError):
+        _spec(sigmas=None).resolved_sigmas()   # no eps_th/total_steps
+
+
+def test_engine_registry():
+    assert set(available_engines()) >= {"vmap", "map", "shard_map"}
+    with pytest.raises(KeyError):
+        get_engine("nope")
+
+    @register_engine("_test_engine")
+    def _builder(spec):
+        return get_engine("vmap")(spec)
+
+    assert get_engine("_test_engine") is _builder
+
+
+# ---------------------------- engine parity ---------------------------------
+
+@pytest.mark.parametrize("engine", ["map", "shard_map"])
+def test_engine_parity_with_vmap(engine):
+    """All engines run the same protocol: numerically matching params and
+    metrics for a small logreg federation (2 rounds, DP noise on)."""
+    params0 = init_linear(DIM)
+    batch = _batch()
+
+    def run(engine):
+        spec = _spec(engine=engine)
+        state = init_state(spec, params0)
+        recs = []
+        for _ in range(2):
+            state, rec = run_round(spec, state, batch, check_budgets=False)
+            recs.append(rec)
+        return state, recs
+
+    ref_state, ref_recs = run("vmap")
+    got_state, got_recs = run(engine)
+    for a, b in zip(jax.tree.leaves(ref_state.params),
+                    jax.tree.leaves(got_state.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+    for ra, rb in zip(ref_recs, got_recs):
+        assert rb["loss"] == pytest.approx(ra["loss"], rel=1e-5)
+        assert rb["max_epsilon"] == pytest.approx(ra["max_epsilon"])
+
+
+def test_topology_local_only_skips_averaging():
+    """local_only = the old make_local_steps_only ablation: client models
+    diverge, and grad_accumulate is respected (scan == stack)."""
+    params0 = init_linear(DIM)
+    batch = _batch()
+    for accum in ("stack", "scan"):
+        spec = _spec(topology="local_only", engine="vmap",
+                     num_microbatches=2, vmap_microbatches=False,
+                     grad_accumulate=accum)
+        state, _ = run_round(spec, init_state(spec, params0), batch,
+                             check_budgets=False)
+        w = np.asarray(state.params["w"])
+        assert not np.allclose(w[0], w[1])
+        if accum == "stack":
+            ref = w
+        else:
+            np.testing.assert_allclose(ref, w, rtol=1e-5, atol=1e-6)
+
+
+def test_topology_full_average_syncs_clients():
+    spec = _spec()
+    state, _ = run_round(spec, init_state(spec, init_linear(DIM)), _batch(),
+                         check_budgets=False)
+    w = np.asarray(state.params["w"])
+    for c in range(1, C):
+        np.testing.assert_allclose(w[0], w[c], rtol=1e-6)
+
+
+# ---------------------------- budgets ---------------------------------------
+
+def test_run_round_enforces_budgets():
+    spec = _spec(c_th=2 * (100.0 + TAU), eps_th=1e9)
+    state = init_state(spec, init_linear(DIM))
+    state, _ = run_round(spec, state, _batch())
+    state, _ = run_round(spec, state, _batch())
+    with pytest.raises(BudgetExceeded) as ei:
+        run_round(spec, state, _batch())
+    assert ei.value.which == "resource"
+
+    tight = _spec(eps_th=0.5, sigmas=(0.05,) * C)
+    with pytest.raises(BudgetExceeded) as ei:
+        run_round(tight, init_state(tight, init_linear(DIM)), _batch())
+    assert ei.value.which == "privacy"
+
+
+def test_functional_train_learns():
+    ds = adult_like(n=1200, dim=DIM, seed=0)
+    fed = split_iid(ds, C, seed=0)
+    spec = _spec(sigmas=(0.05,) * C, batch_sizes=tuple(fed.batch_sizes(16)),
+                 c_th=2000.0, eps_th=1e9, optimizer=sgd(0.5))
+    state = init_state(spec, init_linear(DIM))
+    xt, yt = fed.eval_arrays("test")
+    state, out = train(spec, state, fed.make_sampler(16), max_rounds=12,
+                       eval_fn=make_eval_fn(logreg_loss, xt, yt))
+    assert out["rounds"] == 12
+    assert out["best"]["eval_loss"] < out["history"][0]["loss"]
+
+
+# ---------------------------- checkpoint / resume ---------------------------
+
+def test_flstate_checkpoint_roundtrip(tmp_path):
+    spec = _spec()
+    params0 = init_linear(DIM)
+    state = init_state(spec, params0)
+    for s in range(2):
+        state, _ = run_round(spec, state, _batch(s), check_budgets=False)
+    save_state(str(tmp_path), state, extra={"note": "hi"})
+
+    restored, extra = load_state(str(tmp_path), init_state(spec, params0))
+    assert extra["note"] == "hi"
+    assert restored.rounds_done == state.rounds_done == 2
+    assert restored.steps == state.steps
+    assert restored.resource_spent == pytest.approx(state.resource_spent)
+    np.testing.assert_allclose(restored.rho, state.rho)
+    for a, b in zip(jax.tree.leaves(state.params),
+                    jax.tree.leaves(restored.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # identical continuation: same key, same batch -> same params
+    nxt_a, _ = run_round(spec, state, _batch(9), check_budgets=False)
+    nxt_b, _ = run_round(spec, restored, _batch(9), check_budgets=False)
+    for a, b in zip(jax.tree.leaves(nxt_a.params),
+                    jax.tree.leaves(nxt_b.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-7)
+
+
+# ---------------------------- back-compat wrapper ---------------------------
+
+def test_federation_wrapper_is_thin_over_functional_core():
+    """Old-style Federation == spec + init_state + run_round, same numbers."""
+    params0 = init_linear(DIM)
+    cfg = FLConfig(n_clients=C, tau=TAU, clip_norm=1.0, dp=True)
+    fed = Federation(cfg=cfg, loss_fn=logreg_loss, optimizer=sgd(0.2),
+                     params0=params0, sampler=_sampler,
+                     sigmas=np.full((C,), 0.5, np.float32),
+                     batch_sizes=[B] * C, seed=0)
+    rec = fed.round()
+    assert fed.rounds_done == 1 and fed.history == [rec]
+
+    spec = _spec(seed=0)
+    state = init_state(spec, params0)
+    rng = np.random.default_rng(0)
+    state, rec_f = run_round(spec, state, round_batch(spec, _sampler, rng),
+                             check_budgets=False)
+    assert rec_f["loss"] == pytest.approx(rec["loss"])
+    for a, b in zip(jax.tree.leaves(fed.params),
+                    jax.tree.leaves(state.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+    assert fed.accountant.max_epsilon() == pytest.approx(rec_f["max_epsilon"])
+
+    # historic semantics: .round() charges no resources (train prices them)
+    assert fed.resource_spent == 0.0
+    out = fed.train(Budgets(c_th=420.0, eps_th=1e9, c1=100.0, c2=1.0),
+                    max_rounds=100)
+    # 4 more rounds at c1 + c2*tau = 103 fit in 420
+    assert out["rounds"] == fed.rounds_done == 5
+    assert out["resource_spent"] == pytest.approx(412.0)
