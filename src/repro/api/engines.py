@@ -19,6 +19,12 @@ with params/opt_state carrying a leading client axis C, batch leaves shaped
 ``register_engine`` adds new execution strategies (e.g. async or hierarchical
 aggregation) without touching the drivers: everything upstream selects purely
 via ``FederationSpec.engine``.
+
+Every engine's Eq.-7a clip+noise step runs through the fused
+``dp_clip_noise`` kernel of :mod:`repro.kernels.dispatch` — the backend is
+selected by ``FederationSpec.kernel_backend`` and carried to the gradient
+builder by ``spec.fl_config()``; it is part of ``spec.engine_key()``, so
+switching backends recompiles rather than aliasing cached rounds.
 """
 from __future__ import annotations
 

@@ -17,6 +17,7 @@ from typing import Any, Callable
 import numpy as np
 
 from repro.core.fl import TOPOLOGIES, Budgets, FLConfig, design_sigmas
+from repro.kernels.dispatch import KERNEL_BACKENDS
 from repro.optim.optimizers import Optimizer
 
 ENGINES = ("vmap", "map", "shard_map", "auto")
@@ -36,6 +37,11 @@ class FederationSpec:
     optimizer: Optimizer
     topology: str = "full_average"  # "full_average" | "local_only"
     engine: str = "auto"            # "vmap" | "map" | "shard_map" | "auto"
+    kernel_backend: str = "auto"    # clip+noise kernel backend
+    #   ("pallas" | "interpret" | "ref" | "auto"): every engine's Eq.-7a
+    #   clip+noise step runs through kernels.dispatch get_kernel(
+    #   "dp_clip_noise") on this backend; "auto" probes the installed
+    #   jax/pallas and falls back to the jnp oracle
 
     # -- DP mechanism (Eq. 7a) ---------------------------------------------
     dp: bool = True
@@ -70,6 +76,9 @@ class FederationSpec:
         if self.engine not in ENGINES:
             raise ValueError(f"engine must be one of {ENGINES}, "
                              f"got {self.engine!r}")
+        if self.kernel_backend not in KERNEL_BACKENDS:
+            raise ValueError(f"kernel_backend must be one of "
+                             f"{KERNEL_BACKENDS}, got {self.kernel_backend!r}")
         # normalize sequences to hashable tuples
         if self.sigmas is not None:
             object.__setattr__(self, "sigmas",
@@ -97,7 +106,8 @@ class FederationSpec:
             vmap_microbatches=self.vmap_microbatches,
             grad_accumulate=self.grad_accumulate,
             average_opt_state=self.average_opt_state,
-            vmap_clients=vmap_clients)
+            vmap_clients=vmap_clients,
+            kernel_backend=self.kernel_backend)
 
     def budgets(self) -> Budgets:
         return Budgets(c_th=self.c_th, eps_th=self.eps_th,
@@ -137,4 +147,5 @@ class FederationSpec:
         return (self.loss_fn, self.optimizer, self.n_clients, self.tau,
                 self.clip_norm, self.dp, self.num_microbatches,
                 self.vmap_microbatches, self.grad_accumulate,
-                self.average_opt_state, self.topology, self.engine)
+                self.average_opt_state, self.topology, self.engine,
+                self.kernel_backend)

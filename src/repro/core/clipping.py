@@ -12,6 +12,12 @@ identical privacy algebra. Three granularities:
 
 After clipping, Gaussian noise b ~ N(0, sigma^2 I_d) is added to the averaged
 gradient — exactly Eq. (7a).
+
+The clip+noise arithmetic — the per-step hot-spot on a constrained device —
+can be routed through the fused ``dp_clip_noise`` kernel via
+``make_dp_grad_fn(..., kernel_backend=...)`` (see
+:mod:`repro.kernels.dispatch`); the default ``None`` keeps the legacy
+per-leaf jnp path bit-for-bit.
 """
 from __future__ import annotations
 
@@ -43,6 +49,7 @@ def make_dp_grad_fn(
     num_microbatches: int = 1,
     vmap_microbatches: bool = True,
     accumulate: str = "stack",
+    kernel_backend: str | None = None,
 ) -> Callable:
     """Build dp_grad(params, batch, key, sigma) -> (noisy_grad, metrics).
 
@@ -55,17 +62,45 @@ def make_dp_grad_fn(
                (paper-faithful baseline lowering).
       "scan":  running-sum scan carry — one gradient buffer regardless of the
                microbatch count (§Perf optimization).
+
+    ``kernel_backend`` routes the clip(+noise) arithmetic through the fused
+    ``dp_clip_noise`` kernel of :mod:`repro.kernels.dispatch` on the named
+    backend ("pallas" | "interpret" | "ref" | "auto"); ``None`` keeps the
+    legacy per-leaf jnp path. Both draw the noise from the identical
+    per-leaf key stream, so the choice only changes arithmetic order.
     """
     vg_fn = jax.value_and_grad(loss_fn)
 
+    if kernel_backend is not None:
+        from repro.kernels.ops import dp_clip_noise_tree
+
+        def _clip(g):
+            return dp_clip_noise_tree(g, None, clip_norm, 0.0,
+                                      backend=kernel_backend)
+
+        def _clip_noise(g, key, sigma):
+            return dp_clip_noise_tree(g, key, clip_norm, sigma,
+                                      backend=kernel_backend)
+    else:
+        def _clip(g):
+            return clip_tree(g, clip_norm)
+
+        def _clip_noise(g, key, sigma):
+            clipped, norm = clip_tree(g, clip_norm)
+            return tree_add_noise(key, clipped, sigma), norm
+
     def _one_microbatch(params, mb):
         loss, g = vg_fn(params, mb)
-        clipped, norm = clip_tree(g, clip_norm)
+        clipped, norm = _clip(g)
         return clipped, loss, norm
 
     def dp_grad(params, batch, key, sigma):
         if num_microbatches == 1:
-            clipped, loss, pre_norm = _one_microbatch(params, batch)
+            # fused hot path: one kernel does norm + scale + noise (Eq. 7a)
+            loss, g = vg_fn(params, batch)
+            noisy, pre_norm = _clip_noise(g, key, sigma)
+            metrics = {"loss": loss, "grad_norm_preclip": pre_norm}
+            return noisy, metrics
         else:
             # reshape leading axis B -> (n_micro, B / n_micro)
             def _split(x):
@@ -103,6 +138,8 @@ def make_dp_grad_fn(
                 clipped = jax.tree.map(lambda x: jnp.mean(x, axis=0),
                                        clipped_all)
                 loss, pre_norm = jnp.mean(losses), jnp.mean(norms)
+        # microbatch paths clip per microbatch (kernel when selected) and
+        # noise the averaged gradient once, per the Eq. 7a mechanism
         noisy = tree_add_noise(key, clipped, sigma)
         metrics = {"loss": loss, "grad_norm_preclip": pre_norm}
         return noisy, metrics

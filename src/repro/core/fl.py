@@ -54,13 +54,17 @@ class FLConfig:
     grad_accumulate: str = "stack"  # "stack" (baseline) | "scan" (§Perf opt)
     average_opt_state: bool = True  # average optimizer state with the models
     vmap_clients: bool = True     # False -> lax.map (sequential clients; CPU sims)
+    kernel_backend: str | None = None  # clip+noise via kernels.dispatch
+    #   None -> legacy pure-jnp path; "pallas"/"interpret"/"ref"/"auto" ->
+    #   the fused dp_clip_noise kernel on that backend (repro.api default)
 
 
 def make_grad_fn(loss_fn: Callable, cfg: FLConfig) -> Callable:
     """The per-step gradient: DP (clip + noise, Eq. 7a) or plain."""
     if cfg.dp:
         return make_dp_grad_fn(loss_fn, cfg.clip_norm, cfg.num_microbatches,
-                               cfg.vmap_microbatches, cfg.grad_accumulate)
+                               cfg.vmap_microbatches, cfg.grad_accumulate,
+                               kernel_backend=cfg.kernel_backend)
     return make_plain_grad_fn(loss_fn)
 
 

@@ -14,7 +14,10 @@ runs unchanged.
 **New code should select this engine via ``repro.api``**
 (``FederationSpec(engine="shard_map")``) rather than calling
 :func:`make_shard_map_round` directly; the facade builds the client mesh and
-unifies the call signature with the GSPMD engines.
+unifies the call signature with the GSPMD engines. The per-step clip+noise
+inside each shard follows ``FLConfig.kernel_backend`` (see
+:mod:`repro.kernels.dispatch`), identically to the GSPMD engines — the
+Pallas kernel composes under ``shard_map`` + ``vmap`` + ``scan``.
 """
 from __future__ import annotations
 

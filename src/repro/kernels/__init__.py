@@ -1,3 +1,47 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas compute kernels behind a backend dispatch layer.
+
+The kernels accelerate the compute hot-spots of this repo — above all the
+fused DP clip+noise update (paper Eq. 7a / Eq. 23), the per-step cost that
+dominates DP-PASGD on a resource-constrained device — plus the model-side
+flash attention, RWKV6 WKV scan, and Mamba2 SSD chunk scan.
+
+Kernel backends
+---------------
+Every kernel is registered in :mod:`repro.kernels.dispatch` with its
+pure-jnp oracle from :mod:`repro.kernels.ref` as a guaranteed-correct
+fallback, and is selected by name + backend:
+
+    from repro.kernels import get_kernel
+    y, norm = get_kernel("dp_clip_noise")(g, noise, clip_norm, sigma)
+
+========== ==============================================================
+backend    meaning
+========== ==============================================================
+"pallas"   Mosaic-compiled Pallas (TPU only)
+"interpret" ``pallas_call(interpret=True)`` — kernel body as jax ops (CPU)
+"ref"      the pure-jnp oracle; always available
+"auto"     ``KERNEL_BACKEND`` env var if set, else the best backend whose
+           cached capability probe passes (pallas > interpret > ref)
+========== ==============================================================
+
+The capability probe runs each kernel once on tiny shapes against its
+oracle, so a drifted jax/pallas API degrades to "ref" instead of erroring.
+The training hot path selects its backend declaratively through
+``FederationSpec(kernel_backend=...)``; :mod:`repro.kernels.ops` carries
+the plain-function wrappers. ``register_kernel`` adds new kernels without
+touching any call site.
+"""
+from repro.kernels.dispatch import (
+    KERNEL_BACKENDS,
+    available_backends,
+    backend_works,
+    get_kernel,
+    kernel_names,
+    register_kernel,
+    resolve_backend,
+)
+
+__all__ = [
+    "KERNEL_BACKENDS", "available_backends", "backend_works", "get_kernel",
+    "kernel_names", "register_kernel", "resolve_backend",
+]

@@ -8,6 +8,11 @@ is raised too — the block-sparsity that makes SWA O(S*W).
 
 BlockSpec tiling: q tile (bq, hd), kv tiles (bk, hd); MXU-aligned when
 bq, bk, hd are multiples of 128 (hd=128 for most assigned archs).
+
+kv streaming uses the ref-indexing API (``ref[0, pl.dslice(...), :]``) —
+the tuple-index ``pl.load`` form was dropped upstream. Selected through
+``repro.kernels.dispatch`` (backend "pallas"/"interpret"), with
+``ref.flash_attention_ref`` as the registered oracle fallback.
 """
 from __future__ import annotations
 
@@ -35,10 +40,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, bq, bk, s, window, scale):
 
     def body(j, carry):
         m, l, acc = carry
-        k = pl.load(k_ref, (0, pl.dslice(j * bk, bk), slice(None))
-                    ).astype(jnp.float32)
-        v = pl.load(v_ref, (0, pl.dslice(j * bk, bk), slice(None))
-                    ).astype(jnp.float32)
+        k = k_ref[0, pl.dslice(j * bk, bk), :].astype(jnp.float32)
+        v = v_ref[0, pl.dslice(j * bk, bk), :].astype(jnp.float32)
         k_pos = j * bk + jax.lax.iota(jnp.int32, bk)
         scores = q @ k.T                                   # (bq, bk)
         mask = q_pos[:, None] >= k_pos[None, :]

@@ -1,39 +1,52 @@
-"""jit'd public wrappers around the Pallas kernels.
+"""Public kernel wrappers, routed through the backend dispatch layer.
 
-``interpret`` defaults to True unless running on a real TPU backend, so the
-same call sites work in this CPU container (kernel body executed in Python)
-and on the target hardware (Mosaic-compiled).
+Every wrapper resolves its implementation via
+:func:`repro.kernels.dispatch.get_kernel` (``backend="auto"`` by default):
+Mosaic-compiled Pallas on TPU, ``interpret=True`` Pallas on CPU, and the
+pure-jnp oracle when the installed jax/pallas API cannot run the kernel —
+so the same call sites work in this CPU container, on the target hardware,
+and on a drifted jax without erroring.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.dp_clip_noise import dp_clip_noise as _dp_clip_noise
-from repro.kernels.flash_attention import flash_attention as _flash_attention
-from repro.kernels.mamba2_ssd import mamba2_ssd as _mamba2_ssd
-from repro.kernels.rwkv6_scan import rwkv6_scan as _rwkv6_scan
-from repro.utils.tree import tree_split_keys
+from repro.kernels.dispatch import get_kernel
+from repro.kernels.dp_clip_noise import DEFAULT_BLOCK
 
 
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+def dp_clip_noise_flat(g, noise, clip_norm, sigma, block: int = DEFAULT_BLOCK,
+                       backend: str = "auto"):
+    """Fused clip+noise on flat (N,) arrays; returns (y, pre-clip norm)."""
+    return get_kernel("dp_clip_noise", backend)(g, noise, clip_norm, sigma,
+                                                block=block)
 
 
-def dp_clip_noise_flat(g, noise, clip_norm, sigma, block: int = 64 * 1024):
-    return _dp_clip_noise(g, noise, clip_norm, sigma, block=block,
-                          interpret=_interpret())
-
-
-def dp_clip_noise_tree(grads, key, clip_norm, sigma, block: int = 64 * 1024):
+def dp_clip_noise_tree(grads, key, clip_norm, sigma,
+                       block: int = DEFAULT_BLOCK, backend: str = "auto"):
     """Tree-level fused clip+noise: flatten -> kernel -> unflatten.
-    Drop-in replacement for core.clipping clip_tree + tree_add_noise."""
+
+    Drop-in replacement for core.clipping ``clip_tree`` + ``tree_add_noise``;
+    preserves each leaf's dtype. ``key=None`` skips the noise draw entirely
+    (clip-only kernel lowering — no noise buffer materialized). The noise is
+    drawn per leaf from split keys — the same stream structure as
+    ``tree_add_noise`` — so swapping backends (or swapping the legacy path
+    for this one) only changes arithmetic order, never the sampled noise.
+    """
     leaves, treedef = jax.tree.flatten(grads)
     sizes = [x.size for x in leaves]
     flat = jnp.concatenate([x.reshape(-1).astype(jnp.float32)
                             for x in leaves])
-    noise = jax.random.normal(key, flat.shape, jnp.float32)
-    out, norm = dp_clip_noise_flat(flat, noise, clip_norm, sigma, block)
+    if key is None:
+        noise = None
+    else:
+        keys = jax.random.split(key, len(leaves))
+        noise = jnp.concatenate(
+            [jax.random.normal(k, x.shape, jnp.float32).reshape(-1)
+             for k, x in zip(keys, leaves)])
+    out, norm = dp_clip_noise_flat(flat, noise, clip_norm, sigma,
+                                   block=block, backend=backend)
     news = []
     off = 0
     for x, n in zip(leaves, sizes):
@@ -43,16 +56,17 @@ def dp_clip_noise_tree(grads, key, clip_norm, sigma, block: int = 64 * 1024):
 
 
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
-                    block_q: int = 128, block_k: int = 128):
-    return _flash_attention(q, k, v, causal=causal, window=window,
-                            block_q=block_q, block_k=block_k,
-                            interpret=_interpret())
+                    block_q: int = 128, block_k: int = 128,
+                    backend: str = "auto"):
+    return get_kernel("flash_attention", backend)(
+        q, k, v, causal=causal, window=window,
+        block_q=block_q, block_k=block_k)
 
 
-def rwkv6_scan(r, k, v, w, u, s0=None):
-    return _rwkv6_scan(r, k, v, w, u, s0, interpret=_interpret())
+def rwkv6_scan(r, k, v, w, u, s0=None, backend: str = "auto"):
+    return get_kernel("rwkv6_scan", backend)(r, k, v, w, u, s0)
 
 
-def mamba2_ssd(x, dt, a, b_in, c_in, *, chunk: int = 128):
-    return _mamba2_ssd(x, dt, a, b_in, c_in, chunk=chunk,
-                       interpret=_interpret())
+def mamba2_ssd(x, dt, a, b_in, c_in, *, chunk: int = 128,
+               backend: str = "auto"):
+    return get_kernel("mamba2_ssd", backend)(x, dt, a, b_in, c_in, chunk=chunk)

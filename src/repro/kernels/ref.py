@@ -6,12 +6,14 @@ import jax.numpy as jnp
 
 
 def dp_clip_noise_ref(g, noise, clip_norm, sigma):
-    """y = g * min(1, C/||g||_2) + sigma * noise ; returns (y, norm)."""
+    """y = g * min(1, C/||g||_2) + sigma * noise ; returns (y, norm).
+    ``noise=None`` -> clip only (mirrors the kernel's clip-only lowering)."""
     norm = jnp.sqrt(jnp.sum(jnp.square(g.astype(jnp.float32))))
     scale = jnp.minimum(1.0, clip_norm / jnp.maximum(norm, 1e-12))
-    y = (g.astype(jnp.float32) * scale
-         + sigma * noise.astype(jnp.float32)).astype(g.dtype)
-    return y, norm
+    y = g.astype(jnp.float32) * scale
+    if noise is not None:
+        y = y + sigma * noise.astype(jnp.float32)
+    return y.astype(g.dtype), norm
 
 
 def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):

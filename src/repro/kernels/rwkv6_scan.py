@@ -5,6 +5,12 @@ the sequence with a fori_loop:
     y_t = r_t . (S + u * k_t v_t^T);  S <- diag(w_t) S + k_t v_t^T
 The state tile (hd, hd) = (64, 64) f32 = 16 KiB — deep in VMEM; inputs are
 streamed per (b, h) as (S, hd) tiles.
+
+Per-timestep rows are read/written with the ref-indexing API
+(``ref[0, 0, pl.dslice(t, 1), :]``) — the tuple-index ``pl.load``/``pl.store``
+form was dropped upstream. Selected through ``repro.kernels.dispatch``
+(backend "pallas"/"interpret"), with ``ref.rwkv6_scan_ref`` as the
+registered oracle fallback.
 """
 from __future__ import annotations
 
@@ -21,7 +27,7 @@ def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sout_ref,
     state0 = s0_ref[0, 0].astype(jnp.float32)             # (hd, hd)
 
     def _load_t(ref, t):
-        row = pl.load(ref, (0, 0, pl.dslice(t, 1), slice(None)))
+        row = ref[0, 0, pl.dslice(t, 1), :]               # (1, hd)
         return row[0].astype(jnp.float32)                 # (hd,)
 
     def body(t, state):
@@ -31,8 +37,7 @@ def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sout_ref,
         wt = _load_t(w_ref, t)
         kv = kt[:, None] * vt[None, :]                    # (hd, hd)
         y = ((state + u[:, None] * kv) * rt[:, None]).sum(axis=0)
-        pl.store(y_ref, (0, 0, pl.dslice(t, 1), slice(None)),
-                 y[None].astype(y_ref.dtype))
+        y_ref[0, 0, pl.dslice(t, 1), :] = y[None].astype(y_ref.dtype)
         return state * wt[:, None] + kv
 
     state = jax.lax.fori_loop(0, seq_len, body, state0)

@@ -39,7 +39,7 @@ from repro.models.sharding import (
 )
 from repro.models.transformer import Transformer
 from repro.optim import sgd
-from repro.utils.hlo import analyze_hlo
+from repro.utils.hlo import analyze_hlo, cost_analysis_dict
 from repro.utils.roofline import (
     RooflineTerms,
     active_params,
@@ -312,7 +312,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool = False,
     rec["compile_s"] = round(time.time() - t0, 1)
     rec["status"] = "compiled"
 
-    cost = compiled.cost_analysis() or {}
+    cost = cost_analysis_dict(compiled)
     hlo = compiled.as_text()
     # loop-aware accounting (cost_analysis counts scan bodies once; our
     # models scan over layers and tau, so we parse the HLO instead)

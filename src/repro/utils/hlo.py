@@ -118,6 +118,23 @@ def _dims_of(shape_str: str) -> list[int]:
     return [int(d) for d in m.group(2).split(",")] if m.group(2) else []
 
 
+def _split_top_level(s: str) -> list[str]:
+    """Split on commas outside [] / {} (shape dims and layouts keep commas)."""
+    parts, depth, cur = [], 0, []
+    for ch in s:
+        if ch in "[{":
+            depth += 1
+        elif ch in "]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    parts.append("".join(cur))
+    return parts
+
+
 def _dot_flops(line: str, defs: dict[str, str]) -> float:
     """2 * out_elems * contracted_size from a dot instruction line."""
     m = _DOT_RE.search(line)
@@ -126,8 +143,10 @@ def _dot_flops(line: str, defs: dict[str, str]) -> float:
     out_elems = _elements_of_first_shape(m.group(1))
     paren = line[line.index("dot(") + 4:]
     paren = paren.split(")")[0]
-    lhs_tok = paren.split(",")[0].strip()
-    if "[" in lhs_tok:                       # shape printed inline
+    # operands are either bare names ("%p0") or typed ("f32[64,128]{1,0} %p0"
+    # in newer XLA dumps) — split at top level so shape commas don't cut
+    lhs_tok = _split_top_level(paren)[0].strip()
+    if "[" in lhs_tok and "]" in lhs_tok:    # shape printed inline
         dims = _dims_of(lhs_tok)
     else:                                    # look up the defining instr
         dims = _dims_of(defs.get(lhs_tok.lstrip("%"), ""))
@@ -231,6 +250,21 @@ def analyze_hlo(text: str) -> HloCostModel:
     out.coll_bytes = sum(out.coll_breakdown.values())
     out.n_whiles = len(trip_of_comp) // 2
     return out
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` normalized across jax versions.
+
+    Older jax returns one properties dict; newer versions return a
+    one-element list of dicts (one per partition). Returns {} when XLA
+    provides no analysis.
+    """
+    cost = compiled.cost_analysis()
+    if cost is None:
+        return {}
+    if isinstance(cost, (list, tuple)):
+        return dict(cost[0]) if cost else {}
+    return dict(cost)
 
 
 # ---------------------------------------------------------------------------

@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.utils.hlo import analyze_hlo, count_ops
+from repro.utils.hlo import analyze_hlo, cost_analysis_dict, count_ops
 from repro.utils.roofline import (
     HBM_BW,
     ICI_BW,
@@ -26,8 +26,8 @@ def test_scan_flops_exact():
 
     sds = jax.ShapeDtypeStruct((256, 256), jnp.float32)
     compiled = jax.jit(f).lower(sds, sds).compile()
-    # raw cost_analysis: body counted once
-    raw = compiled.cost_analysis()["flops"]
+    # raw cost_analysis: body counted once (dict or [dict] across versions)
+    raw = cost_analysis_dict(compiled)["flops"]
     assert raw == pytest.approx(2 * 256 ** 3, rel=0.05)
     m = analyze_hlo(compiled.as_text())
     assert m.flops == pytest.approx(10 * 2 * 256 ** 3, rel=0.01)
