@@ -124,18 +124,36 @@ def estimate_constants(case: Case, probe_rounds: int = 30) -> ProblemConstants:
 
 
 def run_dp_pasgd(case: Case, tau: int, c_th: float, eps_th: float,
-                 k_budget: int | None = None, seed: int = 0):
+                 k_budget: int | None = None, seed: int = 0,
+                 participation: float = 1.0, compressor: str = "none",
+                 compression_ratio: float = 0.1, compression_bits: int = 8,
+                 proportional_batches: bool = False):
     """Train DP-PASGD at a given tau until the budgets bind (paper's Eq. 8/9
-    schedule: K chosen by the budgets; sigma by Eq. 23)."""
+    schedule: K chosen by the budgets; sigma by Eq. 23).
+
+    The aggregation-pipeline knobs (participation / compressor) and the
+    paper's per-client X_m (``proportional_batches``) pass straight through
+    to the FederationSpec; the k_max estimate keeps the dense cost so runs
+    at different pipeline settings plan the same K and the Eq.-8 savings
+    show up in ``resource_spent``.
+    """
     fed = case.fed
     k_max = int(c_th / (C1 / tau + C2) // tau * tau)
     k = k_budget or max(tau, k_max)
-    sig = design_sigmas(k, CLIP, fed.batch_sizes(BATCH), eps_th, DELTA)
+    # accounted X_m capped at the batch the sampler actually draws: an X_m
+    # above it would claim a smaller sensitivity (2G/X_m) than the executed
+    # mechanism has; below it is conservative (small clients pay more noise)
+    x_m = [min(x, BATCH)
+           for x in fed.batch_sizes(BATCH, proportional=proportional_batches)]
+    sig = design_sigmas(k, CLIP, x_m, eps_th, DELTA)
     spec = FederationSpec(n_clients=fed.n_clients, tau=tau,
                           loss_fn=case.loss_fn, optimizer=sgd(LR),
                           clip_norm=CLIP, dp=True,
+                          participation=participation, compressor=compressor,
+                          compression_ratio=compression_ratio,
+                          compression_bits=compression_bits,
                           sigmas=tuple(float(s) for s in sig),
-                          batch_sizes=tuple(fed.batch_sizes(BATCH)),
+                          batch_sizes=tuple(x_m),
                           eps_th=eps_th, delta=DELTA,
                           c_th=c_th, c1=C1, c2=C2, seed=seed)
     state = init_state(spec, init_linear(case.dim))

@@ -26,11 +26,12 @@ from repro.api.engines import (
     round_fn_for,
 )
 from repro.api.federation import Federation
-from repro.api.spec import ENGINES, FederationSpec
+from repro.api.spec import COMPRESSORS, ENGINES, FederationSpec
 from repro.api.state import (
     BudgetExceeded,
     FLState,
     accountant_view,
+    collapse_clients,
     eval_params,
     exceeds_budgets,
     init_state,
@@ -43,10 +44,11 @@ from repro.api.state import (
 )
 
 __all__ = [
-    "ENGINES", "FederationSpec",
+    "COMPRESSORS", "ENGINES", "FederationSpec",
     "RoundEngine", "available_engines", "get_engine", "register_engine",
     "resolve_engine", "round_fn_for",
-    "BudgetExceeded", "FLState", "accountant_view", "eval_params",
+    "BudgetExceeded", "FLState", "accountant_view", "collapse_clients",
+    "eval_params",
     "exceeds_budgets", "init_state", "load_state", "max_epsilon",
     "round_batch", "run_round", "save_state", "train",
     "Federation",

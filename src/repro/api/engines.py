@@ -7,7 +7,17 @@ unified round function
         -> (new_params, new_opt_state, metrics)
 
 with params/opt_state carrying a leading client axis C, batch leaves shaped
-(C, tau, B, ...), and sigmas (C,). Three engines ship by default:
+(C, tau, B, ...), and sigmas (C,). When the spec configures an aggregation
+pipeline (``participation`` < 1 or ``compressor`` != "none"), every engine
+instead builds the pipeline form
+
+    round_fn(params, opt_state, batch, key, sigmas, mask, residual)
+        -> (new_params, new_opt_state, new_residual, metrics)
+
+where ``mask`` is the per-round 0/1 participation mask (sampled by
+``run_round`` from the FLState RNG) and ``residual`` is the (C, D)
+error-feedback state carried on :class:`repro.api.FLState`. Three engines
+ship by default:
 
     "vmap"      GSPMD engine, clients vmapped (core/fl.py) — the default on
                 one device and the lowering used for pod-scale GSPMD runs.
@@ -106,7 +116,8 @@ def build_vmap_engine(spec: FederationSpec) -> RoundFn:
     from repro.core.fl import make_round_step
     return make_round_step(spec.loss_fn, spec.optimizer,
                            spec.fl_config(vmap_clients=True),
-                           topology=spec.topology)
+                           topology=spec.topology,
+                           pipeline=spec.aggregation_pipeline())
 
 
 @register_engine("map")
@@ -114,7 +125,8 @@ def build_map_engine(spec: FederationSpec) -> RoundFn:
     from repro.core.fl import make_round_step
     return make_round_step(spec.loss_fn, spec.optimizer,
                            spec.fl_config(vmap_clients=False),
-                           topology=spec.topology)
+                           topology=spec.topology,
+                           pipeline=spec.aggregation_pipeline())
 
 
 @register_engine("shard_map")
@@ -128,7 +140,8 @@ def build_shard_map_engine(spec: FederationSpec) -> RoundFn:
     mesh = Mesh(np.asarray(jax.devices()[:n_shards]), ("client",))
     return make_shard_map_round(spec.loss_fn, spec.optimizer,
                                 spec.fl_config(vmap_clients=True), mesh,
-                                topology=spec.topology)
+                                topology=spec.topology,
+                                pipeline=spec.aggregation_pipeline())
 
 
 # compiled-round cache: keyed on the engine-relevant slice of the spec, so

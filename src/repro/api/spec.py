@@ -16,6 +16,11 @@ from typing import Any, Callable
 
 import numpy as np
 
+from repro.core.aggregation import (
+    COMPRESSORS,
+    compression_wire_ratio,
+    validate_compression,
+)
 from repro.core.fl import TOPOLOGIES, Budgets, FLConfig, design_sigmas
 from repro.kernels.dispatch import KERNEL_BACKENDS
 from repro.optim.optimizers import Optimizer
@@ -42,6 +47,25 @@ class FederationSpec:
     #   clip+noise step runs through kernels.dispatch get_kernel(
     #   "dp_clip_noise") on this backend; "auto" probes the installed
     #   jax/pallas and falls back to the jnp oracle
+
+    # -- aggregation pipeline (Eq. 7b boundary; core/aggregation.py) -------
+    participation: float = 1.0      # fraction q in (0,1], or an int count of
+    #   clients sampled per round (without replacement, from the FLState
+    #   RNG); non-participants neither upload nor spend privacy that round.
+    #   NOTE the type dispatch: participation=1.0 means ALL clients,
+    #   participation=1 (int) means ONE client per round.
+    compressor: str = "none"        # "none" | "topk" | "randk" | "qsgd"
+    compression_ratio: float = 0.1  # fraction of coords kept (topk/randk)
+    compression_bits: int = 8       # bits per coordinate (qsgd)
+    amplify_participation: bool = False  # True: account q-amplified
+    #   per-step rho (privacy.subsampled_rho — the marginal
+    #   subsampled-Gaussian bound, valid in expectation over the
+    #   participation draw, NOT for a realized-heavy client; opt in when
+    #   the subsampling-blind adversary model fits). Default False charges
+    #   realized participants the full Lemma-2 rho: the worst-case
+    #   conditional ledger, sound for the executed mechanism.
+    #   Accounting-only: not part of engine_key(), editable via replace()
+    #   without recompiling.
 
     # -- DP mechanism (Eq. 7a) ---------------------------------------------
     dp: bool = True
@@ -79,6 +103,25 @@ class FederationSpec:
         if self.kernel_backend not in KERNEL_BACKENDS:
             raise ValueError(f"kernel_backend must be one of "
                              f"{KERNEL_BACKENDS}, got {self.kernel_backend!r}")
+        validate_compression(self.compressor, self.compression_ratio,
+                             self.compression_bits)
+        if isinstance(self.participation, bool) or not (
+                isinstance(self.participation, (int, float))):
+            raise ValueError(f"participation must be a fraction in (0, 1] or "
+                             f"an int count, got {self.participation!r}")
+        if isinstance(self.participation, int):
+            if not 1 <= self.participation <= self.n_clients:
+                raise ValueError(
+                    f"participation count must be in [1, {self.n_clients}], "
+                    f"got {self.participation}")
+        elif not 0.0 < self.participation <= 1.0:
+            raise ValueError(f"participation fraction must be in (0, 1], "
+                             f"got {self.participation}")
+        if self.has_pipeline() and self.topology != "full_average":
+            raise ValueError(
+                "participation/compression shape the Eq.-7b aggregation and "
+                "require topology='full_average' (local_only never "
+                "communicates)")
         # normalize sequences to hashable tuples
         if self.sigmas is not None:
             object.__setattr__(self, "sigmas",
@@ -113,9 +156,60 @@ class FederationSpec:
         return Budgets(c_th=self.c_th, eps_th=self.eps_th,
                        c1=self.c1, c2=self.c2)
 
+    # -- aggregation-pipeline views -----------------------------------------
+    def participants_per_round(self) -> int:
+        """The fixed per-round participant count (fraction q rounded to a
+        count, floored at one client so every round aggregates something)."""
+        if isinstance(self.participation, int):
+            return self.participation
+        return max(1, min(self.n_clients,
+                          round(self.participation * self.n_clients)))
+
+    def participation_fraction(self) -> float:
+        """Realized q = participants / n_clients (drives amplification)."""
+        return self.participants_per_round() / self.n_clients
+
+    def accounting_q(self) -> float:
+        """The q the privacy ledger charges per realized step: 1.0 (full
+        Lemma-2 rho, the sound conditional ledger) by default; the
+        participation fraction when ``amplify_participation`` opts into
+        the expectation-level subsampling amplification."""
+        return (self.participation_fraction() if self.amplify_participation
+                else 1.0)
+
+    def wire_ratio(self) -> float:
+        """Compressed-update bytes as a fraction of the dense fp32 update
+        (see :func:`repro.core.aggregation.compression_wire_ratio`)."""
+        return compression_wire_ratio(self.compressor, self.compression_ratio,
+                                      self.compression_bits)
+
+    def comm_scale(self) -> float:
+        """Eq.-8 comm-cost multiplier of the pipeline: wire_ratio * q."""
+        return self.wire_ratio() * self.participation_fraction()
+
+    def has_pipeline(self) -> bool:
+        """Does this spec leave the seed all-clients/dense-mean protocol?
+        When False, rounds are bit-for-bit the pre-pipeline engines."""
+        return (self.compressor != "none"
+                or self.participants_per_round() < self.n_clients)
+
+    def aggregation_pipeline(self):
+        """The AggregationPipeline for this spec, or None for the default
+        (full participation, dense updates) path."""
+        if not self.has_pipeline():
+            return None
+        from repro.core.aggregation import AggregationPipeline, make_compressor
+        return AggregationPipeline(
+            n_clients=self.n_clients,
+            compressor=make_compressor(self.compressor, self.compression_ratio,
+                                       self.compression_bits,
+                                       self.kernel_backend),
+            average_opt_state=self.average_opt_state)
+
     def round_cost(self) -> float:
-        """Eq. (8) per round: c1 + c2 * tau."""
-        return self.c1 + self.c2 * self.tau
+        """Eq. (8) per round: c1 * comm_scale + c2 * tau — the pipeline
+        scales only the aggregation (communication) term."""
+        return self.c1 * self.comm_scale() + self.c2 * self.tau
 
     def resolved_batch_sizes(self) -> tuple[int, ...]:
         return self.batch_sizes or (1,) * self.n_clients
@@ -141,11 +235,15 @@ class FederationSpec:
     def engine_key(self) -> tuple:
         """Hash key of everything that shapes the compiled round function.
 
-        Budget / accounting fields (eps_th, c_th, delta, ...) are excluded —
-        changing them must NOT retrace or recompile the engine.
+        Budget / accounting fields (eps_th, c_th, delta,
+        amplify_participation, ...) are excluded — changing them must NOT
+        retrace or recompile the engine. Participation enters only as
+        ``has_pipeline()``: the participant count itself is a runtime
+        operand (the mask), so q sweeps reuse one compiled round.
         """
         return (self.loss_fn, self.optimizer, self.n_clients, self.tau,
                 self.clip_norm, self.dp, self.num_microbatches,
                 self.vmap_microbatches, self.grad_accumulate,
                 self.average_opt_state, self.topology, self.engine,
-                self.kernel_backend)
+                self.kernel_backend, self.has_pipeline(), self.compressor,
+                self.compression_ratio, self.compression_bits)

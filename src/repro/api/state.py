@@ -20,6 +20,7 @@ import numpy as np
 
 from repro.api.engines import round_fn_for
 from repro.api.spec import FederationSpec
+from repro.core.aggregation import participation_mask
 from repro.core.privacy import PrivacyAccountant
 from repro.utils.tree import tree_broadcast_axis0, tree_mean_over_axis0
 
@@ -47,6 +48,9 @@ class FLState:
     steps: int = 0                  # local iterations accounted so far
     resource_spent: float = 0.0     # accumulated Eq.-(8) cost
     rounds_done: int = 0
+    residual: Any = None            # (C, D) error-feedback residual of the
+    #   aggregation pipeline (core/aggregation.py); None unless the spec
+    #   sets a compressor. Checkpointed alongside params/opt_state.
 
     def replace(self, **changes) -> "FLState":
         return dataclasses.replace(self, **changes)
@@ -60,8 +64,11 @@ def init_state(spec: FederationSpec, params0: Any,
                                      spec.n_clients)
     if key is None:
         key = jax.random.PRNGKey(spec.seed)
+    pipe = spec.aggregation_pipeline()
+    residual = pipe.init_residual(params0) if pipe is not None else None
     return FLState(params=params, opt_state=opt_state, key=key,
-                   rho=np.zeros((spec.n_clients,), np.float64))
+                   rho=np.zeros((spec.n_clients,), np.float64),
+                   residual=residual)
 
 
 def accountant_view(spec: FederationSpec,
@@ -84,10 +91,14 @@ def max_epsilon(spec: FederationSpec, state: FLState) -> float:
 
 def exceeds_budgets(spec: FederationSpec, state: FLState) -> str | None:
     """Would one more round break a budget? Returns "resource" / "privacy"
-    or None. The privacy probe is ``PrivacyAccountant.peek_epsilon(tau)``."""
+    or None. The privacy probe is ``PrivacyAccountant.peek_epsilon(tau)``,
+    conservatively assuming the worst client participates next round (its
+    per-step rho still carries the subsampling amplification factor)."""
     if state.resource_spent + spec.round_cost() > spec.c_th:
         return "resource"
-    if accountant_view(spec, state).peek_epsilon(spec.tau) > spec.eps_th:
+    probe = accountant_view(spec, state).peek_epsilon(
+        spec.tau, q=spec.accounting_q())
+    if probe > spec.eps_th:
         return "privacy"
     return None
 
@@ -110,12 +121,26 @@ def run_round(spec: FederationSpec, state: FLState, batch: Any,
                                  f"exceed eps_th={spec.eps_th}")
     key, sub = jax.random.split(state.key)
     sig = jnp.asarray(spec.resolved_sigmas(), jnp.float32)
-    new_p, new_s, ms = round_fn_for(spec)(state.params, state.opt_state,
-                                          batch, sub, sig)
     acc = accountant_view(spec, state)
-    acc.step(spec.tau)
+    residual = state.residual
+    if spec.has_pipeline():
+        # pipeline round: sample this round's participant set from the
+        # FLState RNG (host-visible — the accountant needs the realized set)
+        sub, mask_key = jax.random.split(sub)
+        mask = participation_mask(mask_key, spec.n_clients,
+                                  spec.participants_per_round())
+        participants = np.flatnonzero(np.asarray(mask))
+        new_p, new_s, residual, ms = round_fn_for(spec)(
+            state.params, state.opt_state, batch, sub, sig, mask,
+            state.residual)
+        acc.step(spec.tau, clients=participants, q=spec.accounting_q())
+    else:
+        participants = np.arange(spec.n_clients)
+        new_p, new_s, ms = round_fn_for(spec)(state.params, state.opt_state,
+                                              batch, sub, sig)
+        acc.step(spec.tau)
     new_state = state.replace(
-        params=new_p, opt_state=new_s, key=key,
+        params=new_p, opt_state=new_s, key=key, residual=residual,
         rho=np.asarray([acc.rho(m) for m in range(spec.n_clients)],
                        np.float64),
         steps=state.steps + spec.tau,
@@ -126,6 +151,7 @@ def run_round(spec: FederationSpec, state: FLState, batch: Any,
     rec["iterations"] = new_state.rounds_done * spec.tau
     rec["max_epsilon"] = acc.max_epsilon()
     rec["resource_spent"] = new_state.resource_spent
+    rec["participants"] = float(len(participants))
     return new_state, rec
 
 
@@ -143,12 +169,19 @@ def round_batch(spec: FederationSpec, sampler: Callable, rng) -> Any:
     return jax.tree.map(lambda *xs: np.stack(xs), *per_client)
 
 
+def collapse_clients(params: Any, topology: str) -> Any:
+    """Client-stacked params -> the single serving/eval model: any replica
+    after full averaging, the cross-client mean under local_only. The one
+    place the topology-collapse rule lives (eval_params and the serving
+    driver both delegate here)."""
+    if topology == "full_average":
+        return jax.tree.map(lambda x: x[0], params)
+    return tree_mean_over_axis0(params)
+
+
 def eval_params(spec: FederationSpec, state: FLState) -> Any:
-    """The single evaluation model: any replica after full averaging, the
-    cross-client mean under local_only."""
-    if spec.topology == "full_average":
-        return jax.tree.map(lambda x: x[0], state.params)
-    return tree_mean_over_axis0(state.params)
+    """The single evaluation model for ``spec``'s topology."""
+    return collapse_clients(state.params, spec.topology)
 
 
 def train(spec: FederationSpec, state: FLState, sampler: Callable,
@@ -207,10 +240,11 @@ def save_state(directory: str, state: FLState,
         "rounds_done": int(state.rounds_done),
         **(extra or {}),
     }
-    save_checkpoint(directory,
-                    {"params": state.params, "opt_state": state.opt_state,
-                     "key": state.key},
-                    step=state.rounds_done, extra=meta)
+    arrays = {"params": state.params, "opt_state": state.opt_state,
+              "key": state.key}
+    if state.residual is not None:
+        arrays["residual"] = state.residual
+    save_checkpoint(directory, arrays, step=state.rounds_done, extra=meta)
 
 
 def load_state(directory: str, like: FLState) -> tuple[FLState, dict]:
@@ -219,13 +253,23 @@ def load_state(directory: str, like: FLState) -> tuple[FLState, dict]:
     ``like`` supplies the pytree structure (e.g. a fresh ``init_state``).
     Returns (state, extra) with any caller metadata passed to save_state.
     """
-    from repro.checkpoint import load_checkpoint
-    tree, _, extra = load_checkpoint(
-        directory, like={"params": like.params, "opt_state": like.opt_state,
-                         "key": like.key})
+    from repro.checkpoint import checkpoint_leaf_paths, load_checkpoint
+    like_tree = {"params": like.params, "opt_state": like.opt_state,
+                 "key": like.key}
+    # ask for the residual only when BOTH sides have one: a dense-trained
+    # checkpoint resumed under a compressor keeps like's zero residual, a
+    # compressed checkpoint resumed dense drops it
+    saved = checkpoint_leaf_paths(directory)
+    has_residual = any(p == "residual" or p.startswith("residual/")
+                       for p in saved)
+    if like.residual is not None and has_residual:
+        like_tree["residual"] = like.residual
+    tree, _, extra = load_checkpoint(directory, like=like_tree)
     state = like.replace(
         params=tree["params"], opt_state=tree["opt_state"],
         key=jnp.asarray(tree["key"]),
+        residual=(jnp.asarray(tree["residual"])
+                  if "residual" in tree else like.residual),
         rho=np.asarray(extra["rho"], np.float64),
         steps=int(extra["steps"]),
         resource_spent=float(extra["resource_spent"]),

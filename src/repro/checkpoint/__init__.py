@@ -1,9 +1,11 @@
 from repro.checkpoint.checkpoint import (
+    checkpoint_leaf_paths,
     load_checkpoint,
     load_federation_state,
     save_checkpoint,
     save_federation_state,
 )
 
-__all__ = ["load_checkpoint", "load_federation_state", "save_checkpoint",
+__all__ = ["checkpoint_leaf_paths", "load_checkpoint",
+           "load_federation_state", "save_checkpoint",
            "save_federation_state"]

@@ -67,6 +67,15 @@ def save_checkpoint(directory: str, tree: Any, step: int = 0,
     os.replace(tmp, os.path.join(directory, "meta.json"))
 
 
+def checkpoint_leaf_paths(directory: str) -> list[str]:
+    """The leaf paths stored in a checkpoint (cheap: reads meta.json only).
+    Lets callers decide which optional subtrees (e.g. FLState.residual)
+    a checkpoint actually carries before asking for them via ``like``."""
+    with open(os.path.join(directory, "meta.json")) as f:
+        meta = json.load(f)
+    return [rec["path"] for rec in meta["leaves"]]
+
+
 def load_checkpoint(directory: str, like: Any | None = None):
     """Returns (tree, step, extra). If ``like`` is given, the result uses its
     treedef (and validates paths); otherwise a nested dict is rebuilt."""

@@ -1,0 +1,307 @@
+"""Pluggable aggregation pipeline for the Eq.-7b round boundary.
+
+The seed protocol hard-codes "all clients ship a dense fp32 update each
+aggregation". This module makes that one point pluggable along the two big
+communication levers of the IoT-FL literature (Briggs et al. 2020,
+arXiv:2004.11794; Imteaj et al. 2020, arXiv:2002.10610):
+
+* **partial participation** — only a per-round sampled subset of clients
+  uploads (and conceptually trains); the server averages over participants
+  and re-broadcasts, and the non-participants' local work is discarded so
+  they never spend privacy;
+* **compressed communication** — each participant's model *update*
+  (delta from the round-start global model) is pushed through a lossy
+  :class:`Compressor` before averaging. The part the compressor dropped is
+  carried in a per-client **error-feedback residual** (Seide et al. 2014 /
+  Karimireddy et al. 2019 EF-SGD) that is added back to the next update the
+  client sends, so the compression error stays bounded instead of
+  accumulating. The residual is federation state: it lives on
+  :class:`repro.api.FLState` and round-trips through checkpoints.
+
+Three compressors ship by default (plus ``"none"``):
+
+``topk``   keep the ``ratio * d`` largest-|coordinate| entries of the update.
+``randk``  keep ``ratio * d`` uniformly sampled coordinates (unscaled; the
+           error-feedback residual corrects the bias).
+``qsgd``   QSGD-style stochastic uniform quantization to ``bits`` bits per
+           coordinate (Alistarh et al. 2017), routed through the fused
+           ``quantize_decompress`` kernel of :mod:`repro.kernels.dispatch`.
+
+Everything here simulates the wire losslessly in dense arrays — compress
+and decompress happen back-to-back — so the engines stay pure pytree maps;
+the *accounting* of what the wire would have carried is
+``FederationSpec.comm_scale()`` (Eq. 8 charges ``c1 * wire_ratio * q`` per
+aggregation).
+
+The pipeline is engine-agnostic: :meth:`AggregationPipeline.aggregate`
+reduces over whatever client block it is handed plus an ``all_sum``
+closure — the identity for the full-view GSPMD engines, ``lax.psum`` over
+the ``client`` mesh axis inside the shard_map engine — so vmap / map /
+shard_map share one implementation of the boundary.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Protocol
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.tree import tree_broadcast_axis0
+
+COMPRESSORS = ("none", "topk", "randk", "qsgd")
+
+
+# ---------------------------------------------------------------------------
+# flat <-> pytree plumbing (compressors act on one flat update vector)
+# ---------------------------------------------------------------------------
+
+def flatten_tree(tree) -> jax.Array:
+    """Concatenate every leaf of a (single-client) pytree into one f32 (D,)."""
+    leaves = jax.tree.leaves(tree)
+    return jnp.concatenate([x.reshape(-1).astype(jnp.float32)
+                            for x in leaves])
+
+
+def unflatten_like(flat: jax.Array, tree):
+    """Inverse of :func:`flatten_tree` given the structure donor ``tree``."""
+    leaves, treedef = jax.tree.flatten(tree)
+    out, off = [], 0
+    for x in leaves:
+        out.append(flat[off:off + x.size].reshape(x.shape).astype(x.dtype))
+        off += x.size
+    return jax.tree.unflatten(treedef, out)
+
+
+def tree_dim(tree) -> int:
+    return sum(x.size for x in jax.tree.leaves(tree))
+
+
+# ---------------------------------------------------------------------------
+# compressors
+# ---------------------------------------------------------------------------
+
+class Compressor(Protocol):
+    """Lossy update codec: flat f32 (D,) -> its dense decompressed image.
+
+    ``__call__(flat, key)`` must be jit/vmap-traceable; ``key`` feeds any
+    sampling the codec does (coordinate choice, stochastic rounding).
+    ``wire_ratio`` is the fraction of the dense fp32 bytes the compressed
+    form would occupy on the wire (index overhead ignored).
+    """
+
+    def __call__(self, flat: jax.Array, key: jax.Array) -> jax.Array: ...
+
+    def wire_ratio(self) -> float: ...
+
+
+def validate_compression(name: str, ratio: float = 0.1,
+                         bits: int = 8) -> None:
+    """Single source of the compressor-knob invariants (spec + factory)."""
+    if name not in COMPRESSORS:
+        raise ValueError(f"compressor must be one of {COMPRESSORS}, "
+                         f"got {name!r}")
+    if not 0.0 < ratio <= 1.0:
+        raise ValueError(f"compression_ratio must be in (0, 1], got {ratio}")
+    if not 1 <= bits <= 16:
+        raise ValueError(f"compression_bits must be in [1, 16], got {bits}")
+
+
+def compression_wire_ratio(name: str, ratio: float = 0.1,
+                           bits: int = 8) -> float:
+    """Compressed-update bytes as a fraction of the dense fp32 update
+    (topk/randk: kept-coordinate fraction, index overhead ignored;
+    qsgd: bits/32). The one place the wire math lives — the Compressor
+    classes and FederationSpec.wire_ratio() both delegate here."""
+    validate_compression(name, ratio, bits)
+    if name in ("topk", "randk"):
+        return ratio
+    if name == "qsgd":
+        return bits / 32.0
+    return 1.0
+
+
+def _keep_k(ratio: float, d: int) -> int:
+    return max(1, min(d, int(round(ratio * d))))
+
+
+@dataclass(frozen=True)
+class TopK:
+    """Keep the ``ratio * d`` largest-magnitude coordinates."""
+    ratio: float
+
+    def __call__(self, flat, key):
+        del key
+        k = _keep_k(self.ratio, flat.shape[0])
+        _, idx = jax.lax.top_k(jnp.abs(flat), k)
+        return jnp.zeros_like(flat).at[idx].set(flat[idx])
+
+    def wire_ratio(self) -> float:
+        return compression_wire_ratio("topk", ratio=self.ratio)
+
+
+@dataclass(frozen=True)
+class RandK:
+    """Keep ``ratio * d`` uniformly sampled coordinates (fresh each round).
+
+    Deliberately unscaled: the classic unbiased d/k rescaling explodes the
+    variance at small k, while under error feedback the residual re-sends
+    whatever mass the sampling dropped, so the biased form converges
+    (Karimireddy et al. 2019, Thm. 2 applies to any delta-contraction).
+    """
+    ratio: float
+
+    def __call__(self, flat, key):
+        d = flat.shape[0]
+        k = _keep_k(self.ratio, d)
+        idx = jax.random.permutation(key, d)[:k]
+        return jnp.zeros_like(flat).at[idx].set(flat[idx])
+
+    def wire_ratio(self) -> float:
+        return compression_wire_ratio("randk", ratio=self.ratio)
+
+
+@dataclass(frozen=True)
+class QSGD:
+    """QSGD-style stochastic uniform quantization to ``bits`` bits/coord.
+
+    The round trip (quantize -> wire -> dequantize) is fused into the
+    ``quantize_decompress`` kernel; randomness for the stochastic rounding
+    is drawn from ``key`` so the codec stays deterministic per round key
+    and oracle-checkable across kernel backends.
+    """
+    bits: int
+    kernel_backend: str = "auto"
+
+    def __call__(self, flat, key):
+        from repro.kernels.ops import quantize_decompress_flat
+        u = jax.random.uniform(key, flat.shape, jnp.float32)
+        y, _ = quantize_decompress_flat(flat, u, self.bits,
+                                        backend=self.kernel_backend)
+        return y
+
+    def wire_ratio(self) -> float:
+        return compression_wire_ratio("qsgd", bits=self.bits)
+
+
+def make_compressor(name: str, ratio: float = 0.1, bits: int = 8,
+                    kernel_backend: str = "auto") -> Compressor | None:
+    """Instantiate a compressor by spec name; ``"none"`` -> None."""
+    validate_compression(name, ratio, bits)
+    if name == "none":
+        return None
+    if name == "topk":
+        return TopK(ratio)
+    if name == "randk":
+        return RandK(ratio)
+    from repro.kernels.dispatch import resolve_backend
+    # resolve (and capability-probe) eagerly: pipelines are built outside
+    # the traced round, where the probe can actually run
+    return QSGD(bits, resolve_backend("quantize_decompress", kernel_backend))
+
+
+# ---------------------------------------------------------------------------
+# participation
+# ---------------------------------------------------------------------------
+
+def participation_mask(key: jax.Array, n_clients: int,
+                       n_participants: int) -> jax.Array:
+    """0/1 f32 (C,) mask with exactly ``n_participants`` ones, uniformly
+    sampled without replacement. Fixed-size (not Poisson) sampling keeps the
+    aggregation denominator static and the round jit-shape stable."""
+    idx = jax.random.permutation(key, n_clients)[:n_participants]
+    return jnp.zeros((n_clients,), jnp.float32).at[idx].set(1.0)
+
+
+# ---------------------------------------------------------------------------
+# the pipeline
+# ---------------------------------------------------------------------------
+
+def _identity(x):
+    return x
+
+
+@dataclass(frozen=True)
+class AggregationPipeline:
+    """The Eq.-7b round boundary with participation masking, compression,
+    and error feedback. One instance per FederationSpec (static under jit).
+    """
+    n_clients: int
+    compressor: Compressor | None       # None -> dense updates
+    average_opt_state: bool = True
+
+    def needs_residual(self) -> bool:
+        return self.compressor is not None
+
+    def init_residual(self, params0) -> jax.Array | None:
+        """(C, D) zero error-feedback residual — new FLState pytree field.
+        ``params0`` is the single-replica init (no client axis)."""
+        if not self.needs_residual():
+            return None
+        return jnp.zeros((self.n_clients, tree_dim(params0)), jnp.float32)
+
+    def aggregate(self, prev_params, new_params, new_opt_state, prev_opt_state,
+                  residual, mask, agg_keys,
+                  all_sum: Callable[[Any], Any] = _identity):
+        """Replace the dense mean of Eq. 7b for one client block.
+
+        prev/new params and opt_state: stacked pytrees, leading axis = the
+        local block size B (== n_clients on the GSPMD engines, the per-shard
+        block under shard_map). ``residual`` is (B, D) or None; ``mask`` is
+        the 0/1 (B,) participation slice; ``agg_keys`` are per-client PRNG
+        keys (B, ...). ``all_sum`` closes the cross-shard reduction.
+
+        Returns ``(params, opt_state, residual)``: every participant's
+        (compressed, error-fed) update is averaged into the global model
+        and the global model re-broadcast over the block. Non-participants'
+        residual is left untouched; their optimizer state is kept when
+        ``average_opt_state=False`` and — like every client's — overwritten
+        with the participants' average when True (the Eq.-7b default,
+        which deliberately syncs optimizer history with the model).
+        """
+        block = mask.shape[0]
+        denom = all_sum(jnp.sum(mask))                      # >= 1 by spec
+
+        def _masked_mean_bcast(new):
+            m = mask.reshape((-1,) + (1,) * (new.ndim - 1))
+            s = all_sum(jnp.sum(m * new.astype(jnp.float32), axis=0))
+            avg = (s / denom).astype(new.dtype)
+            return jnp.broadcast_to(avg[None], new.shape)
+
+        if self.compressor is not None:
+            flat_prev = jax.vmap(flatten_tree)(prev_params)     # (B, D)
+            flat_new = jax.vmap(flatten_tree)(new_params)
+            corrected = (flat_new - flat_prev) + residual
+            sent = jax.vmap(self.compressor)(corrected, agg_keys)
+            sel = mask[:, None]
+            residual = sel * (corrected - sent) + (1.0 - sel) * residual
+            avg_delta = all_sum(jnp.sum(sel * sent, axis=0)) / denom
+            # prev params are globally synchronized (full_average every
+            # round), so any replica anchors the new global model
+            single_prev = jax.tree.map(lambda x: x[0], prev_params)
+            new_global = unflatten_like(flat_prev[0] + avg_delta, single_prev)
+            params = tree_broadcast_axis0(new_global, block)
+        else:
+            # dense updates against a synchronized global model: the masked
+            # mean of the participants' new replicas IS the new global —
+            # stay in pytree space, no (B, D) flatten copies
+            params = jax.tree.map(_masked_mean_bcast, new_params)
+
+        if self.average_opt_state:
+            opt_state = jax.tree.map(_masked_mean_bcast, new_opt_state)
+        else:
+            # non-participants did not really train: keep their old state
+            def _mask_leaf(new, old):
+                m = mask.reshape((-1,) + (1,) * (new.ndim - 1))
+                return (m * new.astype(jnp.float32)
+                        + (1.0 - m) * old.astype(jnp.float32)).astype(new.dtype)
+            opt_state = jax.tree.map(_mask_leaf, new_opt_state, prev_opt_state)
+        return params, opt_state, residual
+
+    def masked_metrics(self, metrics, mask,
+                       all_sum: Callable[[Any], Any] = _identity):
+        """Mean of per-client metric leaves (B,) over the participants only
+        (non-participants' local work is discarded, so is their loss)."""
+        denom = all_sum(jnp.sum(mask))
+        return jax.tree.map(lambda x: all_sum(jnp.sum(mask * x)) / denom,
+                            metrics)

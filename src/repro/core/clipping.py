@@ -72,7 +72,12 @@ def make_dp_grad_fn(
     vg_fn = jax.value_and_grad(loss_fn)
 
     if kernel_backend is not None:
+        from repro.kernels.dispatch import resolve_backend
         from repro.kernels.ops import dp_clip_noise_tree
+
+        # resolve (and capability-probe) the backend now, at build time:
+        # inside the traced round the probes could not run
+        kernel_backend = resolve_backend("dp_clip_noise", kernel_backend)
 
         def _clip(g):
             return dp_clip_noise_tree(g, None, clip_norm, 0.0,

@@ -22,23 +22,34 @@ from repro.core.privacy import rho_budget, sigma_star
 
 @dataclass(frozen=True)
 class ResourceModel:
-    """Eq. (8): C = c1 K / tau + c2 K."""
-    c1: float  # communication cost of one global aggregation
+    """Eq. (8): C = c1 * comm_scale * K / tau + c2 K.
+
+    ``comm_scale`` extends the paper's model with the aggregation-pipeline
+    knobs: ``wire_ratio * q`` (compression times participation,
+    ``FederationSpec.comm_scale()``). Cheaper aggregations shift the Eq.-22
+    binding tau* down — ``solve()`` co-designs tau against compression and
+    participation for free. Default 1.0 is the paper's dense protocol.
+    """
+    c1: float  # communication cost of one dense full-cohort aggregation
     c2: float  # computation cost of one local update
+    comm_scale: float = 1.0  # pipeline multiplier on c1 (wire_ratio * q)
+
+    def _c1(self) -> float:
+        return self.c1 * self.comm_scale
 
     def cost(self, k: float, tau: float) -> float:
-        return self.c1 * k / tau + self.c2 * k
+        return self._c1() * k / tau + self.c2 * k
 
     def tau_binding(self, k: float, c_th: float) -> float:
         """Eq. (22): tau* that spends exactly the resource budget at K=k."""
         denom = c_th - self.c2 * k
         if denom <= 0:
             return math.inf
-        return self.c1 * k / denom
+        return self._c1() * k / denom
 
     def k_max(self, c_th: float, tau: float) -> float:
         """Largest K affordable at aggregation period tau."""
-        return c_th / (self.c1 / tau + self.c2)
+        return c_th / (self._c1() / tau + self.c2)
 
 
 @dataclass(frozen=True)

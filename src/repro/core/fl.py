@@ -93,7 +93,7 @@ def make_local_round(grad_fn: Callable, optimizer: Optimizer, tau: int):
 
 
 def make_round_step(loss_fn: Callable, optimizer: Optimizer, cfg: FLConfig,
-                    topology: str = "full_average"):
+                    topology: str = "full_average", pipeline=None):
     """Build ``round_step(params, opt_state, batch, key, sigmas)``.
 
     params/opt_state : pytrees with leading client axis C on every leaf
@@ -102,23 +102,37 @@ def make_round_step(loss_fn: Callable, optimizer: Optimizer, cfg: FLConfig,
     topology         : "full_average" (Eq. 7b averaging each round) or
                        "local_only" (ablation: fully-local training, no
                        cross-client communication ever)
+    pipeline         : optional :class:`repro.core.aggregation
+                       .AggregationPipeline`. ``None`` (the default) keeps
+                       this builder bit-for-bit the seed protocol; with a
+                       pipeline the returned function takes two extra
+                       operands and threads the error-feedback residual:
+                       ``round_step(params, opt_state, batch, key, sigmas,
+                       mask, residual) -> (new_p, new_s, new_residual,
+                       metrics)`` where ``mask`` is the 0/1 (C,)
+                       participation mask sampled by the driver.
     returns          : (new_params, new_opt_state, metrics)
     """
     if topology not in TOPOLOGIES:
         raise ValueError(f"topology must be one of {TOPOLOGIES}, "
                          f"got {topology!r}")
+    if pipeline is not None and topology != "full_average":
+        raise ValueError("the aggregation pipeline requires "
+                         "topology='full_average'")
     local_round = make_local_round(make_grad_fn(loss_fn, cfg), optimizer,
                                    cfg.tau)
 
+    def _local_rounds(params, opt_state, batch, keys, sigmas):
+        if cfg.vmap_clients:
+            return jax.vmap(local_round)(params, opt_state, batch,
+                                         keys, sigmas)
+        return jax.lax.map(lambda args: local_round(*args),
+                           (params, opt_state, batch, keys, sigmas))
+
     def round_step(params, opt_state, batch, key, sigmas):
         keys = jax.random.split(key, cfg.n_clients)
-        if cfg.vmap_clients:
-            new_p, new_s, ms = jax.vmap(local_round)(params, opt_state, batch,
-                                                     keys, sigmas)
-        else:
-            new_p, new_s, ms = jax.lax.map(
-                lambda args: local_round(*args),
-                (params, opt_state, batch, keys, sigmas))
+        new_p, new_s, ms = _local_rounds(params, opt_state, batch, keys,
+                                         sigmas)
         if topology == "full_average":
             # ---- Eq. (7b): periodic global averaging ----------------------
             avg = tree_mean_over_axis0(new_p)
@@ -129,7 +143,19 @@ def make_round_step(loss_fn: Callable, optimizer: Optimizer, cfg: FLConfig,
         ms = jax.tree.map(jnp.mean, ms)
         return new_p, new_s, ms
 
-    return round_step
+    def round_step_pipeline(params, opt_state, batch, key, sigmas, mask,
+                            residual):
+        key, agg_key = jax.random.split(key)
+        keys = jax.random.split(key, cfg.n_clients)
+        agg_keys = jax.random.split(agg_key, cfg.n_clients)
+        new_p, new_s, ms = _local_rounds(params, opt_state, batch, keys,
+                                         sigmas)
+        new_p, new_s, residual = pipeline.aggregate(
+            params, new_p, new_s, opt_state, residual, mask, agg_keys)
+        ms = pipeline.masked_metrics(ms, mask)
+        return new_p, new_s, residual, ms
+
+    return round_step if pipeline is None else round_step_pipeline
 
 
 @dataclass

@@ -47,16 +47,28 @@ def _shard_map(f, mesh, in_specs, out_specs):
 def make_shard_map_round(loss_fn: Callable, optimizer: Optimizer,
                          cfg: FLConfig, mesh: Mesh,
                          client_axis: str = "client",
-                         topology: str = "full_average"):
+                         topology: str = "full_average", pipeline=None):
     """Build round_step(params, opt_state, batch, key, sigmas) on ``mesh``.
 
     params/opt_state carry a leading client axis sharded over ``client_axis``
     (local view inside the shard_map has leading dim n_clients / n_shards).
     batch leaves are (C, tau, B, ...); sigmas is (C,).
+
+    With an :class:`repro.core.aggregation.AggregationPipeline` the built
+    function takes ``(params, opt_state, batch, key, sigmas, mask, residual)``
+    and returns ``(new_p, new_s, new_residual, metrics)`` — identical
+    signature and per-client key/compressor streams as the GSPMD engines, so
+    the three engines stay parity-testable under every pipeline setting. The
+    mask, residual, and per-client compressor keys are sharded over
+    ``client_axis`` like everything else; the cross-shard reduction is the
+    same single ``lax.pmean``-class collective (a psum of masked block sums).
     """
     if topology not in TOPOLOGIES:
         raise ValueError(f"topology must be one of {TOPOLOGIES}, "
                          f"got {topology!r}")
+    if pipeline is not None and topology != "full_average":
+        raise ValueError("the aggregation pipeline requires "
+                         "topology='full_average'")
     n_shards = mesh.shape[client_axis]
     if cfg.n_clients % n_shards:
         raise ValueError(f"{cfg.n_clients} clients do not divide over "
@@ -85,14 +97,43 @@ def make_shard_map_round(loss_fn: Callable, optimizer: Optimizer,
         ms = jax.tree.map(lambda x: jax.lax.pmean(x, client_axis), ms)
         return new_p, new_s, ms
 
+    def per_shard_pipeline(params, opt_state, batches, keys, agg_keys,
+                           sigmas, mask, residual):
+        """Pipeline variant: masked/compressed Eq.-7b with error feedback.
+        The collective is one psum of the block's masked update sums."""
+        new_p, new_s, ms = jax.vmap(local_round)(params, opt_state, batches,
+                                                 keys, sigmas)
+        psum = lambda x: jax.lax.psum(x, axis_name=client_axis)
+        new_p, new_s, residual = pipeline.aggregate(
+            params, new_p, new_s, opt_state, residual, mask, agg_keys,
+            all_sum=psum)
+        ms = pipeline.masked_metrics(ms, mask, all_sum=psum)
+        return new_p, new_s, residual, ms
+
     cspec = P(client_axis)
+    if pipeline is None:
+        smapped = _shard_map(
+            per_shard, mesh,
+            in_specs=(cspec, cspec, cspec, cspec, cspec),
+            out_specs=(cspec, cspec, P()))
+
+        def round_step(params, opt_state, batch, key, sigmas):
+            keys = jax.random.split(key, cfg.n_clients)
+            return smapped(params, opt_state, batch, keys, sigmas)
+
+        return round_step
+
     smapped = _shard_map(
-        per_shard, mesh,
-        in_specs=(cspec, cspec, cspec, cspec, cspec),
-        out_specs=(cspec, cspec, P()))
+        per_shard_pipeline, mesh,
+        in_specs=(cspec,) * 8,
+        out_specs=(cspec, cspec, cspec, P()))
 
-    def round_step(params, opt_state, batch, key, sigmas):
+    def round_step_pipeline(params, opt_state, batch, key, sigmas, mask,
+                            residual):
+        key, agg_key = jax.random.split(key)
         keys = jax.random.split(key, cfg.n_clients)
-        return smapped(params, opt_state, batch, keys, sigmas)
+        agg_keys = jax.random.split(agg_key, cfg.n_clients)
+        return smapped(params, opt_state, batch, keys, agg_keys, sigmas,
+                       mask, residual)
 
-    return round_step
+    return round_step_pipeline

@@ -41,6 +41,34 @@ def grad_sensitivity(clip_norm: float, batch_size: int) -> float:
     return 2.0 * clip_norm / batch_size
 
 
+def subsampled_rho(rho_step: float, q: float) -> float:
+    """Per-step zCDP cost under per-round client subsampling at rate q.
+
+    Beyond the paper: with partial participation, the per-round release of
+    client m's update is the *subsampled* Gaussian mechanism — present with
+    probability q, absorbed into the aggregate otherwise — whose expected
+    per-round cost is ~ q^2 * rho_step in the small-q regime (the RDP
+    amplification of Abadi et al. 2016 / Wang et al. 2019, transported to
+    zCDP). The accountant charges only *realized* participating rounds
+    (a ~q fraction of them), so the per-realized-step amplification factor
+    is q^2 / q = q, matching the q^2-per-round expectation while keeping
+    the ledger deterministic. q = 1 is exact Lemma 2 (no amplification).
+
+    Caveat (deliberate modeling choice): the q factor bounds the *marginal*
+    mechanism, i.e. it holds in expectation over the participation draw. A
+    client that happens to be sampled in far more than a q-fraction of a
+    short run is undercharged relative to participation-conditioned
+    accounting (which would cost the full rho_step per realized step — the
+    amplification benefits the subsampling-blind observer, not the
+    conditioned one). For a worst-case conditional ledger, account with
+    q = 1 and keep the reduced realized step count —
+    ``FederationSpec(amplify_participation=False)`` selects exactly that.
+    """
+    if not 0.0 < q <= 1.0:
+        raise ValueError(f"participation rate q must be in (0, 1], got {q}")
+    return q * rho_step
+
+
 def epsilon_after_k(k: int, clip_norm: float, batch_size: int, sigma: float,
                     delta: float) -> float:
     """Eq. (9): overall (eps, delta)-DP loss of one device after k iterations."""
@@ -107,13 +135,23 @@ class PrivacyAccountant:
         self.sigmas[client] = sigma
         self._rho.setdefault(client, 0.0)
 
-    def step(self, n_steps: int = 1) -> None:
-        """Account for n_steps local iterations on every registered client."""
+    def step(self, n_steps: int = 1, clients=None, q: float = 1.0) -> None:
+        """Account for n_steps local iterations.
+
+        ``clients`` restricts the charge to the round's realized participant
+        set (everyone when None) — non-participants take no steps, query
+        nothing, and spend nothing. ``q`` is the per-round participation
+        rate; each charged step costs :func:`subsampled_rho` (amplification
+        by client subsampling; identity at q = 1).
+        """
         if n_steps < 0:
             raise ValueError("n_steps must be >= 0")
-        for m, x in self.batch_sizes.items():
-            sens = grad_sensitivity(self.clip_norm, x)
-            self._rho[m] += n_steps * gaussian_zcdp(sens, self.sigmas[m])
+        charged = (self.batch_sizes.keys() if clients is None
+                   else [int(m) for m in clients])
+        for m in charged:
+            sens = grad_sensitivity(self.clip_norm, self.batch_sizes[m])
+            self._rho[m] += n_steps * subsampled_rho(
+                gaussian_zcdp(sens, self.sigmas[m]), q)
         self.steps += n_steps
 
     def rho(self, client: int) -> float:
@@ -127,14 +165,17 @@ class PrivacyAccountant:
             return 0.0
         return max(self.epsilon(m) for m in self._rho)
 
-    def peek_epsilon(self, extra_steps: int = 0) -> float:
+    def peek_epsilon(self, extra_steps: int = 0, q: float = 1.0) -> float:
         """Worst-client eps if every client took ``extra_steps`` more local
         iterations — WITHOUT mutating the accountant.
 
         This is the pre-round probe of the budget-aware training loop: run
         the next round only if ``peek_epsilon(tau) <= eps_th``. rho composes
         additively (Lemma 1) and Lemma 3 is monotone in rho, so the max can
-        be taken in rho-space before the single conversion.
+        be taken in rho-space before the single conversion. Under partial
+        participation pass the round's rate ``q``: the probe stays
+        conservative (it assumes the worst client IS sampled) while its
+        per-step cost carries the subsampling amplification.
         """
         if extra_steps < 0:
             raise ValueError("extra_steps must be >= 0")
@@ -142,8 +183,9 @@ class PrivacyAccountant:
             return 0.0
         worst_rho = max(
             self._rho.get(m, 0.0)
-            + extra_steps * gaussian_zcdp(grad_sensitivity(self.clip_norm, x),
-                                          self.sigmas[m])
+            + extra_steps * subsampled_rho(
+                gaussian_zcdp(grad_sensitivity(self.clip_norm, x),
+                              self.sigmas[m]), q)
             for m, x in self.batch_sizes.items())
         return zcdp_to_dp(worst_rho, self.delta)
 

@@ -41,10 +41,31 @@ class FederatedData:
     def n_clients(self) -> int:
         return len(self.clients)
 
-    def batch_sizes(self, batch_size: int) -> list[int]:
-        """Per-step mini-batch size X_m per client (uniform; sampling is with
-        replacement so clients smaller than the batch still work)."""
-        return [batch_size for _ in self.clients]
+    def batch_sizes(self, batch_size: int,
+                    proportional: bool = False) -> list[int]:
+        """Per-step mini-batch size X_m per client.
+
+        Default: uniform ``batch_size`` for every client (sampling is with
+        replacement so clients smaller than the batch still work).
+
+        ``proportional=True`` returns the paper's per-client X_m: sizes
+        proportional to each client's ``n_train`` with the same *total*
+        batch budget (mean ~= batch_size, floor 1), so big clients batch
+        big and the privacy accountant sees their true 2G/X_m sensitivity.
+        Note the engines still *sample* a uniform ``batch_size`` per step
+        (round batches stack to one (C, tau, B, ...) block); a caller
+        pairing this with ``make_sampler(batch_size)`` must cap the
+        accounted X_m at ``batch_size`` (as ``benchmarks.common.
+        run_dp_pasgd`` does) — an X_m above the executed batch would claim
+        a smaller sensitivity than the mechanism actually has, while below
+        it the accounting is merely conservative.
+        """
+        if not proportional:
+            return [batch_size for _ in self.clients]
+        total = sum(c.n_train for c in self.clients)
+        budget = batch_size * len(self.clients)
+        return [max(1, round(budget * c.n_train / total))
+                for c in self.clients]
 
     def make_sampler(self, batch_size: int):
         """sampler(client, tau, rng) -> {'x': (tau,B,d), 'y': (tau,B)}"""

@@ -101,8 +101,20 @@ def _disabled_backends() -> frozenset[str]:
 
 
 @functools.lru_cache(maxsize=None)
+def _probe_verdict(name: str, backend: str) -> bool:
+    """The cached probe run. Only ever called from a clean trace state —
+    see backend_works."""
+    entry = _entry(name)
+    if entry.probe is None:
+        return False
+    try:
+        return bool(entry.probe(_bind(entry, backend)))
+    except Exception:
+        return False
+
+
 def backend_works(name: str, backend: str) -> bool:
-    """Cached capability probe: does ``backend`` run ``name`` correctly here?
+    """Capability probe (cached): does ``backend`` run ``name`` here?
 
     "ref" is always True. Backends named in ``KERNEL_DISPATCH_DISABLE``
     read as unavailable without probing (oracle-only rehearsal). "pallas"
@@ -110,6 +122,14 @@ def backend_works(name: str, backend: str) -> bool:
     the probe is even attempted. Any exception from the probe — the
     drifted-API AttributeErrors included — reads as "unavailable", never
     as a test failure.
+
+    Probes cannot run while an outer jax trace is active (the pallas smoke
+    test would capture ambient tracers and spuriously fail); if the first
+    resolution happens mid-trace, answer "unavailable" for that call
+    WITHOUT caching the verdict, so a later eager resolution still probes
+    for real. Engine builders resolve their backends eagerly at build time
+    (clipping.make_dp_grad_fn, aggregation.make_compressor), so the hot
+    path never takes this fallback.
     """
     if backend == "ref":
         return True
@@ -120,12 +140,14 @@ def backend_works(name: str, backend: str) -> bool:
         return False
     if backend == "pallas" and jax.default_backend() != "tpu":
         return False
-    if entry.probe is None:
-        return False
-    try:
-        return bool(entry.probe(_bind(entry, backend)))
-    except Exception:
-        return False
+    if not jax.core.trace_state_clean():
+        return False                   # uncached: retry eagerly later
+    return _probe_verdict(name, backend)
+
+
+# probe-cache reset for tests/tooling (the cache moved to _probe_verdict
+# when the trace-state guard landed; keep the historic reset point)
+backend_works.cache_clear = _probe_verdict.cache_clear
 
 
 def available_backends(name: str) -> tuple[str, ...]:
@@ -192,6 +214,17 @@ def _dp_clip_noise_probe(impl) -> bool:
     return _close(got, _ref.dp_clip_noise_ref(g, noise, 1.0, 0.25))
 
 
+def _quantize_decompress_oracle(x, u, bits, **_tuning):
+    return _ref.quantize_decompress_ref(x, u, bits)
+
+
+def _quantize_decompress_probe(impl) -> bool:
+    x = jnp.linspace(-3.0, 2.0, 41, dtype=jnp.float32)
+    u = jax.random.uniform(jax.random.PRNGKey(3), (41,), jnp.float32)
+    got = impl(x, u, 4, block=16)
+    return _close(got, _ref.quantize_decompress_ref(x, u, 4))
+
+
 def _flash_attention_oracle(q, k, v, *, causal=True, window=0, **_tuning):
     return _ref.flash_attention_ref(q, k, v, causal=causal, window=window)
 
@@ -236,10 +269,14 @@ def _register_builtins() -> None:
     from repro.kernels.dp_clip_noise import dp_clip_noise
     from repro.kernels.flash_attention import flash_attention
     from repro.kernels.mamba2_ssd import mamba2_ssd
+    from repro.kernels.quantize_decompress import quantize_decompress
     from repro.kernels.rwkv6_scan import rwkv6_scan
 
     register_kernel("dp_clip_noise", pallas=dp_clip_noise,
                     ref=_dp_clip_noise_oracle, probe=_dp_clip_noise_probe)
+    register_kernel("quantize_decompress", pallas=quantize_decompress,
+                    ref=_quantize_decompress_oracle,
+                    probe=_quantize_decompress_probe)
     register_kernel("flash_attention", pallas=flash_attention,
                     ref=_flash_attention_oracle, probe=_flash_attention_probe)
     register_kernel("rwkv6_scan", pallas=rwkv6_scan,

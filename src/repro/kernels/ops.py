@@ -55,6 +55,15 @@ def dp_clip_noise_tree(grads, key, clip_norm, sigma,
     return jax.tree.unflatten(treedef, news), norm
 
 
+def quantize_decompress_flat(x, u, bits: int, block: int = DEFAULT_BLOCK,
+                             backend: str = "auto"):
+    """Fused QSGD quantize->dequantize round trip on flat (N,) arrays.
+
+    ``u ~ U[0,1)`` supplies the stochastic-rounding randomness (caller PRNG,
+    like the noise operand of dp_clip_noise). Returns (y, scale)."""
+    return get_kernel("quantize_decompress", backend)(x, u, bits, block=block)
+
+
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                     block_q: int = 128, block_k: int = 128,
                     backend: str = "auto"):

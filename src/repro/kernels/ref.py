@@ -16,6 +16,17 @@ def dp_clip_noise_ref(g, noise, clip_norm, sigma):
     return y.astype(g.dtype), norm
 
 
+def quantize_decompress_ref(x, u, bits):
+    """QSGD round trip: y = sign(x) * floor(|x|/scale + u) * scale with
+    scale = max|x| / (2**bits - 1); u ~ U[0,1) drives the stochastic
+    rounding. Returns (y, scale)."""
+    levels = (1 << bits) - 1
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-30) / levels
+    level = jnp.floor(jnp.abs(xf) / scale + u.astype(jnp.float32))
+    return (jnp.sign(xf) * level * scale).astype(x.dtype), scale
+
+
 def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
     """q/k/v (B, H, S, hd) same head count (GQA expanded by caller)."""
     s = q.shape[2]

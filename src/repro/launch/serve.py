@@ -2,11 +2,18 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --smoke \
         --batch 4 --prompt-len 32 --gen 16
+
+Serving a federated model: pass ``--fl-checkpoint DIR`` pointing at a
+``repro.api.save_state`` checkpoint (e.g. from ``repro.launch.train
+--save DIR``) and the driver loads it through ``FederationSpec`` /
+``FLState`` / ``load_state`` and serves the aggregated model
+(``repro.api.eval_params``) instead of random init.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
 import jax
@@ -15,6 +22,31 @@ import numpy as np
 
 from repro.configs import get_arch, smoke_variant
 from repro.models.transformer import Transformer
+
+
+def load_federated_params(model: Transformer, directory: str):
+    """The single serving model out of a DP-PASGD checkpoint directory.
+
+    Reads the spec scalars the training launcher stored next to the arrays
+    (``federation_meta``) and loads ONLY the params leaves — no optimizer
+    state, no error-feedback residual, no C-way replica allocation — so
+    checkpoints from any optimizer and any compressor serve alike at
+    params-sized memory. The client axis collapses exactly as
+    ``repro.api.eval_params``: any replica under ``full_average``, the
+    cross-client mean under ``local_only``.
+    """
+    from repro.api import collapse_clients
+    from repro.checkpoint import load_checkpoint
+
+    with open(os.path.join(directory, "meta.json")) as f:
+        meta = json.load(f)["extra"]
+    # path donor only: load_checkpoint matches leaves by path, so the
+    # single-replica init supplies the params/<leaf> paths and the stored
+    # (C, ...) arrays come back untouched
+    params_like = {"params": model.init(jax.random.PRNGKey(0))}
+    tree, _, _ = load_checkpoint(directory, like=params_like)
+    return collapse_clients(tree["params"],
+                            meta.get("topology", "full_average"))
 
 
 def generate(model: Transformer, params, prompts, gen_tokens: int,
@@ -50,13 +82,19 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--fl-checkpoint", default=None,
+                    help="serve the aggregated model of a repro.api "
+                         "save_state checkpoint instead of random init")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
     if args.smoke:
         cfg = smoke_variant(cfg)
     model = Transformer(cfg)
-    params = model.init(jax.random.PRNGKey(0))
+    if args.fl_checkpoint:
+        params = load_federated_params(model, args.fl_checkpoint)
+    else:
+        params = model.init(jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
     prompts = jnp.asarray(
         rng.integers(0, cfg.vocab, size=(args.batch, args.prompt_len)),
@@ -76,6 +114,7 @@ def main(argv=None):
         "generated_shape": list(out.shape),
         "tokens_per_s": round(args.batch * args.gen / dt, 1),
         "sample": np.asarray(out[0, :8]).tolist(),
+        "params": "federated" if args.fl_checkpoint else "random-init",
     }, indent=2))
     return 0
 

@@ -31,11 +31,15 @@ from repro.optim import sgd
 def build_federation(cfg, n_clients: int, tau: int, batch_size: int,
                      seq_len: int, sigmas, lr: float = 0.1,
                      clip_norm: float = 1.0, delta: float = 1e-4,
-                     engine: str = "auto", seed: int = 0):
+                     engine: str = "auto", seed: int = 0,
+                     participation: float = 1.0, compressor: str = "none",
+                     compression_ratio: float = 0.1,
+                     compression_bits: int = 8):
     """Assemble the repro.api handles for a transformer federation.
 
     Returns ``(model, spec, state, sampler)`` — drive them with
-    ``repro.api.train(spec, state, sampler, ...)``.
+    ``repro.api.train(spec, state, sampler, ...)``. The aggregation-pipeline
+    knobs (participation / compressor) pass through to the spec.
     """
     model = Transformer(cfg)
     task = TokenTaskConfig(vocab=cfg.vocab, seq_len=seq_len,
@@ -48,10 +52,24 @@ def build_federation(cfg, n_clients: int, tau: int, batch_size: int,
         n_clients=n_clients, tau=tau, loss_fn=model.loss_fn,
         optimizer=sgd(lr), engine=engine, dp=True, clip_norm=clip_norm,
         num_microbatches=1,
+        participation=participation, compressor=compressor,
+        compression_ratio=compression_ratio,
+        compression_bits=compression_bits,
         sigmas=tuple(float(s) for s in np.asarray(sigmas)),
         batch_sizes=(batch_size,) * n_clients, delta=delta, seed=seed)
     state = init_state(spec, params0)
     return model, spec, state, stream.sampler
+
+
+def federation_meta(spec) -> dict:
+    """The spec scalars a serving driver needs to rebuild a ``like`` FLState
+    for ``load_state`` (see ``repro.launch.serve.load_federated_params``)."""
+    return {"n_clients": spec.n_clients, "tau": spec.tau,
+            "compressor": spec.compressor,
+            "compression_ratio": spec.compression_ratio,
+            "compression_bits": spec.compression_bits,
+            "participation": spec.participants_per_round(),
+            "topology": spec.topology}
 
 
 def main(argv=None):
@@ -74,6 +92,12 @@ def main(argv=None):
     ap.add_argument("--c2", type=float, default=1.0)
     ap.add_argument("--engine", default="auto",
                     choices=("vmap", "map", "shard_map", "auto"))
+    ap.add_argument("--participation", type=float, default=1.0,
+                    help="fraction of clients sampled per round")
+    ap.add_argument("--compressor", default="none",
+                    choices=("none", "topk", "randk", "qsgd"))
+    ap.add_argument("--compress-ratio", type=float, default=0.1)
+    ap.add_argument("--compress-bits", type=int, default=8)
     ap.add_argument("--save", default=None)
     args = ap.parse_args(argv)
 
@@ -101,7 +125,10 @@ def main(argv=None):
 
     model, spec, state, sampler = build_federation(
         cfg, args.clients, tau, args.batch, args.seq, sigmas, lr=args.lr,
-        clip_norm=args.clip, delta=args.delta, engine=args.engine)
+        clip_norm=args.clip, delta=args.delta, engine=args.engine,
+        participation=args.participation, compressor=args.compressor,
+        compression_ratio=args.compress_ratio,
+        compression_bits=args.compress_bits)
     spec = spec.replace(eps_th=args.eps, c_th=args.cth,
                         c1=args.c1, c2=args.c2)
     t0 = time.time()
@@ -115,7 +142,9 @@ def main(argv=None):
         "wall_s": round(dt, 1),
     }, indent=2))
     if args.save:
-        save_state(args.save, state, extra={"history": out["history"]})
+        save_state(args.save, state,
+                   extra={"history": out["history"],
+                          **federation_meta(spec)})
         print(f"saved federation state to {args.save}")
     return 0
 

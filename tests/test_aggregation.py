@@ -1,0 +1,363 @@
+"""Aggregation-pipeline tests: compressors, error feedback, partial
+participation, engine parity under every pipeline setting, and the
+refactor guard (default spec == pre-pipeline engines, bit for bit)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import FederationSpec, init_state, run_round, train
+from repro.core.aggregation import (
+    AggregationPipeline,
+    QSGD,
+    RandK,
+    TopK,
+    flatten_tree,
+    make_compressor,
+    participation_mask,
+    unflatten_like,
+)
+from repro.core.fl import make_round_step
+from repro.models.linear import init_linear, logreg_loss
+from repro.optim import sgd
+
+C, TAU, DIM, B = 4, 3, 8, 4
+
+
+def _spec(**kw):
+    base = dict(n_clients=C, tau=TAU, loss_fn=logreg_loss, optimizer=sgd(0.2),
+                clip_norm=1.0, dp=True, sigmas=(0.5,) * C,
+                batch_sizes=(B,) * C)
+    base.update(kw)
+    return FederationSpec(**base)
+
+
+def _batch(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"x": jnp.asarray(rng.normal(size=(C, TAU, B, DIM)), jnp.float32),
+            "y": jnp.asarray(rng.integers(0, 2, size=(C, TAU, B)), jnp.int32)}
+
+
+def _run(spec, rounds=2, seed=0):
+    state = init_state(spec, init_linear(DIM))
+    recs = []
+    for r in range(rounds):
+        state, rec = run_round(spec, state, _batch(seed + r),
+                               check_budgets=False)
+        recs.append(rec)
+    return state, recs
+
+
+# Every non-default pipeline setting the parity gate covers; qsgd exercises
+# the fused quantize_decompress kernel on the spec's (auto) backend.
+PIPELINE_SETTINGS = [
+    ("q50-dense", dict(participation=0.5)),
+    ("q1client-dense", dict(participation=1)),      # int count
+    ("topk25", dict(compressor="topk", compression_ratio=0.25)),
+    ("randk25-q50", dict(compressor="randk", compression_ratio=0.25,
+                         participation=0.5)),
+    ("qsgd4", dict(compressor="qsgd", compression_bits=4)),
+    ("qsgd8-q75", dict(compressor="qsgd", compression_bits=8,
+                       participation=0.75)),
+]
+
+
+# ---------------------------- compressors -----------------------------------
+
+def test_flatten_unflatten_roundtrip():
+    tree = {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": jnp.ones((4,), jnp.bfloat16)}
+    flat = flatten_tree(tree)
+    assert flat.shape == (10,) and flat.dtype == jnp.float32
+    back = unflatten_like(flat, tree)
+    for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(tree)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_topk_keeps_largest_coordinates():
+    x = jnp.asarray([0.1, -5.0, 0.3, 2.0, -0.2, 0.05, 1.0, -0.4])
+    y = TopK(0.25)(x, None)                       # k = 2 of 8
+    np.testing.assert_array_equal(
+        np.asarray(y), np.asarray([0, -5.0, 0, 2.0, 0, 0, 0, 0], np.float32))
+
+
+def test_randk_keeps_exactly_k_unscaled():
+    x = jnp.arange(1.0, 101.0)
+    y = RandK(0.1)(x, jax.random.PRNGKey(0))
+    nz = np.flatnonzero(np.asarray(y))
+    assert len(nz) == 10
+    np.testing.assert_array_equal(np.asarray(y)[nz], np.asarray(x)[nz])
+
+
+def test_qsgd_error_bounded_by_one_level():
+    """|x - Q(x)| < scale = max|x| / (2^bits - 1) elementwise (stochastic
+    rounding moves at most one level), and signs/zeros are preserved."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (512,)) * 3.0
+    x = x.at[7].set(0.0)
+    for bits in (2, 4, 8):
+        comp = QSGD(bits)
+        y = comp(x, jax.random.PRNGKey(1))
+        scale = float(jnp.max(jnp.abs(x))) / (2 ** bits - 1)
+        assert float(jnp.max(jnp.abs(y - x))) <= scale * (1 + 1e-6)
+        assert float(y[7]) == 0.0
+        assert comp.wire_ratio() == bits / 32.0
+
+
+def test_make_compressor_validation():
+    assert make_compressor("none") is None
+    assert isinstance(make_compressor("topk", ratio=0.5), TopK)
+    with pytest.raises(ValueError):
+        make_compressor("gzip")
+    with pytest.raises(ValueError):
+        make_compressor("topk", ratio=0.0)
+    with pytest.raises(ValueError):
+        make_compressor("qsgd", bits=0)
+
+
+def test_participation_mask_fixed_size():
+    seen = set()
+    for s in range(20):
+        m = participation_mask(jax.random.PRNGKey(s), 8, 3)
+        assert m.shape == (8,) and float(m.sum()) == 3.0
+        seen.add(tuple(np.flatnonzero(np.asarray(m))))
+    assert len(seen) > 5        # actually random across rounds
+
+
+# ------------------------ refactor guard (satellite) ------------------------
+
+@pytest.mark.parametrize("engine", ["vmap", "map", "shard_map"])
+def test_default_spec_bitwise_identical_to_pre_refactor(engine):
+    """participation=1.0, compressor='none' routes through the exact seed
+    code path: the engine builds the legacy 5-arg round_step (not the
+    pipeline variant) and its jaxpr is IDENTICAL to a directly-built
+    pre-pipeline round_step — same program, hence bit-for-bit rounds.
+    (The runtime check is ULP-tolerance: two separately-jitted copies of
+    one jaxpr may differ by 1 ULP in XLA:CPU instruction scheduling.)"""
+    from repro.api import get_engine
+
+    spec = _spec(engine=engine)
+    assert not spec.has_pipeline()
+    explicit = spec.replace(participation=1.0, compressor="none")
+    assert explicit.engine_key() == spec.engine_key()
+    assert not explicit.has_pipeline()
+
+    state = init_state(spec, init_linear(DIM))
+
+    engine_fn = get_engine(engine)(spec)
+    assert engine_fn.__name__ == "round_step"       # not round_step_pipeline
+    if engine == "shard_map":
+        from jax.sharding import Mesh
+        from repro.api.engines import _n_client_shards
+        from repro.core.fl_shard_map import make_shard_map_round
+        # the same client mesh the engine derives (the process may run with
+        # a forced multi-device host platform, e.g. after importing dryrun)
+        n_shards = _n_client_shards(C, len(jax.devices()))
+        mesh = Mesh(np.asarray(jax.devices()[:n_shards]), ("client",))
+        rs = make_shard_map_round(logreg_loss, sgd(0.2),
+                                  spec.fl_config(vmap_clients=True), mesh)
+    else:
+        rs = make_round_step(logreg_loss, sgd(0.2),
+                             spec.fl_config(vmap_clients=(engine == "vmap")))
+    _, sub = jax.random.split(state.key)
+    sig = jnp.asarray(spec.resolved_sigmas(), jnp.float32)
+    args = (state.params, state.opt_state, _batch(), sub, sig)
+    assert str(jax.make_jaxpr(engine_fn)(*args)) == \
+        str(jax.make_jaxpr(rs)(*args))
+
+    nxt, _ = run_round(spec, state, _batch(), check_budgets=False)
+    want_p, _, _ = jax.jit(rs)(*args)
+    for a, b in zip(jax.tree.leaves(nxt.params), jax.tree.leaves(want_p)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-8)
+
+
+# ---------------------------- engine parity ---------------------------------
+
+@pytest.mark.parametrize("engine", ["map", "shard_map"])
+@pytest.mark.parametrize("name,kw", PIPELINE_SETTINGS,
+                         ids=[n for n, _ in PIPELINE_SETTINGS])
+def test_engine_parity_under_pipeline(engine, name, kw):
+    """vmap / map / shard_map run the identical pipeline protocol: same
+    participant sets, same compressor streams, matching params + residual
+    (atol 1e-5) for every compressor x participation setting."""
+    ref_state, ref_recs = _run(_spec(engine="vmap", **kw))
+    got_state, got_recs = _run(_spec(engine=engine, **kw))
+    for a, b in zip(jax.tree.leaves(ref_state.params),
+                    jax.tree.leaves(got_state.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+    if ref_state.residual is not None:
+        np.testing.assert_allclose(np.asarray(ref_state.residual),
+                                   np.asarray(got_state.residual),
+                                   rtol=1e-5, atol=1e-5)
+    for ra, rb in zip(ref_recs, got_recs):
+        assert rb["loss"] == pytest.approx(ra["loss"], rel=1e-4)
+        assert rb["participants"] == ra["participants"]
+        assert rb["max_epsilon"] == pytest.approx(ra["max_epsilon"])
+
+
+# ---------------------------- pipeline semantics ----------------------------
+
+def test_full_average_sync_survives_compression():
+    """Whatever the codec drops, every client ends the round on the same
+    global model (Eq. 7b still broadcasts one average)."""
+    for name, kw in PIPELINE_SETTINGS:
+        state, _ = _run(_spec(**kw), rounds=1)
+        w = np.asarray(state.params["w"])
+        for c in range(1, C):
+            np.testing.assert_allclose(w[0], w[c], rtol=1e-6,
+                                       err_msg=f"setting {name}")
+
+
+def test_error_feedback_residual_carries_dropped_mass():
+    """One full-participation topk round: residual == (delta + 0) - sent,
+    i.e. exactly the coordinates the codec dropped; and it is non-zero for
+    an aggressive ratio."""
+    spec = _spec(compressor="topk", compression_ratio=0.1)
+    state0 = init_state(spec, init_linear(DIM))
+    assert state0.residual is not None
+    np.testing.assert_array_equal(np.asarray(state0.residual), 0.0)
+    state1, _ = run_round(spec, state0, _batch(), check_budgets=False)
+    res = np.asarray(state1.residual)
+    assert res.shape == state0.residual.shape
+    assert (np.abs(res) > 0).any()
+    # round 2 re-sends the residual: with ratio 1.0 nothing is dropped
+    dense = _spec(compressor="topk", compression_ratio=1.0)
+    sdense, _ = run_round(dense, init_state(dense, init_linear(DIM)),
+                          _batch(), check_budgets=False)
+    np.testing.assert_allclose(np.asarray(sdense.residual), 0.0, atol=1e-7)
+
+
+def test_nonparticipants_spend_no_privacy():
+    """Default (conservative) ledger: realized participants pay the full
+    Lemma-2 per-step rho; non-participants pay nothing."""
+    spec = _spec(participation=1)         # exactly one client per round
+    state, recs = _run(spec, rounds=3)
+    assert all(r["participants"] == 1.0 for r in recs)
+    # 3 rounds, 1 participant each: at most 3 clients have nonzero rho
+    assert (state.rho > 0).sum() <= 3
+    from repro.core.privacy import gaussian_zcdp, grad_sensitivity
+    per_round = TAU * gaussian_zcdp(grad_sensitivity(1.0, B), 0.5)
+    assert state.rho.sum() == pytest.approx(3 * per_round, rel=1e-12)
+
+
+def test_participation_amplification_strictly_tightens_epsilon():
+    """Opted-in amplification: same rounds, same sigmas, q < 1 gives
+    strictly lower max_epsilon than q = 1 (fewer realized steps AND the
+    q-amplified per-step rho)."""
+    _, recs_full = _run(_spec(), rounds=3)
+    _, recs_half = _run(_spec(participation=0.5,
+                              amplify_participation=True), rounds=3)
+    assert recs_half[-1]["max_epsilon"] < recs_full[-1]["max_epsilon"]
+
+
+def test_amplified_ledger_is_opt_in():
+    """amplify_participation=True divides the realized per-step charge by
+    exactly 1/q vs the sound default ledger — accounting-only toggle, same
+    engine key (no recompile)."""
+    conservative = _spec(participation=1)
+    amplified = conservative.replace(amplify_participation=True)
+    assert amplified.engine_key() == conservative.engine_key()
+    assert conservative.accounting_q() == 1.0
+    assert amplified.accounting_q() == pytest.approx(1 / C)
+    s_con, _ = _run(conservative, rounds=3)
+    s_amp, _ = _run(amplified, rounds=3)
+    # same seed -> same participant draw; ledgers differ exactly by q
+    np.testing.assert_allclose(s_amp.rho, s_con.rho / C, rtol=1e-12)
+    assert s_con.rho.sum() > s_amp.rho.sum()
+
+
+def test_round_cost_scales_with_pipeline():
+    base = _spec()
+    assert base.comm_scale() == 1.0
+    assert base.round_cost() == pytest.approx(100.0 + TAU)
+    s = _spec(participation=0.5, compressor="topk", compression_ratio=0.25)
+    assert s.wire_ratio() == 0.25
+    assert s.comm_scale() == pytest.approx(0.125)
+    assert s.round_cost() == pytest.approx(100.0 * 0.125 + TAU)
+    q = _spec(compressor="qsgd", compression_bits=8)
+    assert q.comm_scale() == pytest.approx(0.25)
+    # run_round charges the scaled cost
+    state, recs = _run(s, rounds=2)
+    assert state.resource_spent == pytest.approx(2 * s.round_cost())
+
+
+def test_budget_driven_train_does_more_rounds_when_compressed():
+    """Under the same C_th, the compressed/subsampled federation affords
+    strictly more rounds than the dense one (the whole point of Eq. 8)."""
+    def sampler(m, tau, rng):
+        return {"x": rng.normal(size=(tau, B, DIM)).astype(np.float32),
+                "y": rng.integers(0, 2, size=(tau, B)).astype(np.int32)}
+
+    c_th = 5 * (100.0 + TAU)          # 5 dense rounds
+    dense = _spec(c_th=c_th, eps_th=1e9)
+    sd, outd = train(dense, init_state(dense, init_linear(DIM)), sampler,
+                     max_rounds=100)
+    comp = _spec(c_th=c_th, eps_th=1e9, participation=0.5,
+                 compressor="topk", compression_ratio=0.25)
+    sc, outc = train(comp, init_state(comp, init_linear(DIM)), sampler,
+                     max_rounds=100)
+    assert outd["rounds"] == 5
+    assert outc["rounds"] > outd["rounds"]
+    assert sc.resource_spent <= c_th
+
+
+def test_spec_pipeline_validation():
+    with pytest.raises(ValueError):
+        _spec(compressor="gzip")
+    with pytest.raises(ValueError):
+        _spec(participation=0.0)
+    with pytest.raises(ValueError):
+        _spec(participation=C + 1)
+    with pytest.raises(ValueError):
+        _spec(compression_ratio=1.5)
+    with pytest.raises(ValueError):
+        _spec(participation=0.5, topology="local_only")
+    # pipeline knobs are part of the engine key; budget edits are not
+    s = _spec(compressor="topk")
+    assert s.engine_key() != _spec().engine_key()
+    assert s.replace(eps_th=3.0).engine_key() == s.engine_key()
+    # the participant COUNT is a runtime operand (the mask): q sweeps at a
+    # fixed has_pipeline() reuse one compiled round
+    q = _spec(participation=0.5)
+    assert q.replace(participation=0.75).engine_key() == q.engine_key()
+    assert q.engine_key() != _spec().engine_key()   # pipeline vs seed path
+
+
+# ------------------- proportional X_m (satellite) ---------------------------
+
+def test_federated_batch_sizes_proportional():
+    from repro.data import adult_like, split_dirichlet
+    fed = split_dirichlet(adult_like(n=2000, dim=6, seed=0), 5, alpha=0.3,
+                          seed=0)
+    uniform = fed.batch_sizes(16)
+    assert uniform == [16] * 5
+    prop = fed.batch_sizes(16, proportional=True)
+    assert len(prop) == 5 and all(x >= 1 for x in prop)
+    # same total budget (up to rounding), ordered like the client sizes
+    assert sum(prop) == pytest.approx(16 * 5, abs=5)
+    sizes = [c.n_train for c in fed.clients]
+    assert np.argmax(prop) == np.argmax(sizes)
+    assert prop != uniform
+
+
+# ------------------- CI smoke leg (REPRO_SMOKE_COMPRESSOR) ------------------
+
+@pytest.mark.skipif(not os.environ.get("REPRO_SMOKE_COMPRESSOR"),
+                    reason="set REPRO_SMOKE_COMPRESSOR=topk|randk|qsgd to "
+                           "smoke the compressed pipeline in this env")
+def test_env_selected_compressor_smoke():
+    """CI's oracle-only leg sets REPRO_SMOKE_COMPRESSOR so the compressed
+    round (incl. the quantize_decompress kernel path for qsgd) is exercised
+    on whatever kernel backend this environment resolves."""
+    name = os.environ["REPRO_SMOKE_COMPRESSOR"]
+    state, recs = _run(_spec(compressor=name, participation=0.5), rounds=2)
+    assert np.isfinite(recs[-1]["loss"])
+    assert state.residual is not None
+    w = np.asarray(state.params["w"])
+    for c in range(1, C):
+        np.testing.assert_allclose(w[0], w[c], rtol=1e-6)

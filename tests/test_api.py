@@ -204,6 +204,77 @@ def test_flstate_checkpoint_roundtrip(tmp_path):
                                    rtol=1e-6, atol=1e-7)
 
 
+def test_flstate_checkpoint_roundtrip_with_pipeline(tmp_path):
+    """Compressed, partially-participating federation: the error-feedback
+    residual round-trips through save_state/load_state and the restored
+    state resumes to IDENTICAL next-round params."""
+    spec = _spec(participation=0.5, compressor="topk", compression_ratio=0.25)
+    params0 = init_linear(DIM)
+    state = init_state(spec, params0)
+    assert state.residual is not None
+    for s in range(3):
+        state, _ = run_round(spec, state, _batch(s), check_budgets=False)
+    assert np.abs(np.asarray(state.residual)).max() > 0
+    save_state(str(tmp_path), state, extra={"note": "pipeline"})
+
+    restored, extra = load_state(str(tmp_path), init_state(spec, params0))
+    assert extra["note"] == "pipeline"
+    np.testing.assert_array_equal(np.asarray(restored.residual),
+                                  np.asarray(state.residual))
+    np.testing.assert_allclose(restored.rho, state.rho)
+    assert restored.resource_spent == pytest.approx(state.resource_spent)
+    # identical continuation: same key stream -> same participant set, same
+    # compressor randomness, same params
+    nxt_a, rec_a = run_round(spec, state, _batch(9), check_budgets=False)
+    nxt_b, rec_b = run_round(spec, restored, _batch(9), check_budgets=False)
+    assert rec_a["participants"] == rec_b["participants"]
+    for a, b in zip(jax.tree.leaves(nxt_a.params),
+                    jax.tree.leaves(nxt_b.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(nxt_a.residual),
+                                  np.asarray(nxt_b.residual))
+
+
+def test_dense_checkpoint_resumes_under_compression(tmp_path):
+    """A checkpoint trained WITHOUT a compressor restores into a spec WITH
+    one: the missing residual falls back to like's fresh zeros and the
+    compressed federation trains on."""
+    params0 = init_linear(DIM)
+    dense = _spec()
+    state = init_state(dense, params0)
+    state, _ = run_round(dense, state, _batch(), check_budgets=False)
+    save_state(str(tmp_path), state)
+
+    comp = _spec(compressor="topk", compression_ratio=0.25)
+    restored, _ = load_state(str(tmp_path), init_state(comp, params0))
+    assert restored.rounds_done == 1
+    np.testing.assert_array_equal(np.asarray(restored.residual), 0.0)
+    nxt, rec = run_round(comp, restored, _batch(1), check_budgets=False)
+    assert np.isfinite(rec["loss"])
+    assert np.abs(np.asarray(nxt.residual)).max() > 0
+
+
+def test_params_only_load_serves_any_optimizer(tmp_path):
+    """The serving path (launch/serve.load_federated_params) loads ONLY the
+    params leaves, so checkpoints from structurally different optimizer
+    states (momentum: velocity) restore without the full FLState. The
+    single-replica init works as the path donor (leaves match by path, not
+    shape), so serving never allocates C replicas or a residual."""
+    from repro.checkpoint import load_checkpoint
+    from repro.optim import momentum
+    spec = _spec(optimizer=momentum(0.2, 0.9), compressor="topk",
+                 compression_ratio=0.5)
+    state = init_state(spec, init_linear(DIM))
+    state, _ = run_round(spec, state, _batch(), check_budgets=False)
+    save_state(str(tmp_path), state)
+
+    tree, _, _ = load_checkpoint(str(tmp_path),
+                                 like={"params": init_linear(DIM)})
+    for a, b in zip(jax.tree.leaves(tree["params"]),
+                    jax.tree.leaves(state.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 # ---------------------------- back-compat wrapper ---------------------------
 
 def test_federation_wrapper_is_thin_over_functional_core():

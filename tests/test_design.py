@@ -28,6 +28,29 @@ def test_resource_model_eq8():
     assert r.cost(100, tau) == pytest.approx(1000.0)
 
 
+def test_resource_model_comm_scale_codesigns_tau():
+    """Aggregation-pipeline knobs (comm_scale = wire_ratio * q) cheapen the
+    c1 term: same budget affords more iterations, and the Eq.-22 binding
+    tau* drops (aggregate more often when aggregation is cheap)."""
+    dense = ResourceModel(c1=100.0, c2=1.0)
+    comp = ResourceModel(c1=100.0, c2=1.0, comm_scale=0.125)
+    assert comp.cost(100, 10) == pytest.approx(0.125 * 100 * 100 / 10 + 100)
+    assert comp.k_max(1000.0, 10) > dense.k_max(1000.0, 10)
+    assert comp.tau_binding(100, 1000.0) < dense.tau_binding(100, 1000.0)
+    # the solver inherits the model: compressed problem picks smaller tau*
+    p_dense = make_problem()
+    p_comp = DesignProblem(
+        consts=p_dense.consts, resource=comp, clip_norm=1.0,
+        batch_sizes=p_dense.batch_sizes, delta=1e-4,
+        eps_th=p_dense.eps_th, c_th=p_dense.c_th)
+    sd, sc = p_dense.solve(), p_comp.solve()
+    assert sc.cost <= p_comp.c_th * (1 + 1e-9)
+    assert sc.tau_relaxed < sd.tau_relaxed
+    # strictly larger feasible set + pointwise-smaller objective at every K
+    # (smaller tau* shrinks the Theorem-1 divergence term) -> no worse bound
+    assert sc.predicted_bound <= sd.predicted_bound * (1 + 1e-6)
+
+
 def test_solution_respects_budgets():
     p = make_problem()
     sol = p.solve()

@@ -54,6 +54,15 @@ def _dp_clip_only_case(n):
     return build
 
 
+def _quant_case(n, bits, dtype, scale):
+    def build():
+        x = jax.random.normal(jax.random.PRNGKey(0), (n,), dtype) * scale
+        u = jax.random.uniform(jax.random.PRNGKey(1), (n,), jnp.float32)
+        tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+        return (x, u, bits), {"block": 4096}, tol
+    return build
+
+
 def _flash_case(s, bq, bk, dtype, window=0):
     def build():
         b, h, hd = 2, 3, 64
@@ -115,6 +124,17 @@ CASES = {
         for s in (100.0, 1e-3)
     ] + [
         ("clip-only-n1000", _dp_clip_only_case(1000)),
+    ],
+    "quantize_decompress": [
+        (f"n{n}-b{bits}-{np.dtype(d).name if d != jnp.bfloat16 else 'bf16'}",
+         _quant_case(n, bits, d, s))
+        for n, bits, d, s in [
+            (17, 8, jnp.float32, 1.0),
+            (1024, 4, jnp.float32, 50.0),
+            (64 * 1024 + 3, 8, jnp.float32, 1e-3),
+            (1024, 8, jnp.bfloat16, 1.0),
+            (255, 1, jnp.float32, 1.0),
+        ]
     ],
     "flash_attention": [
         ("s128-b64", _flash_case(128, 64, 64, jnp.float32)),

@@ -99,3 +99,41 @@ def test_accountant_validates_inputs():
         acc.register_client(0, 0, 1.0)
     with pytest.raises(ValueError):
         acc.register_client(0, 10, -1.0)
+
+
+# -------------------- subsampled participation (amplification) --------------
+
+def test_subsampled_rho_pins_amplification_math():
+    """Realized-step accounting: each participating step costs q * rho_step
+    (q^2 per-round expectation amortized over the ~q participating rounds);
+    q = 1 is exact Lemma 2."""
+    rho_step = privacy.gaussian_zcdp(privacy.grad_sensitivity(1.0, 32), 2.0)
+    assert privacy.subsampled_rho(rho_step, 1.0) == rho_step
+    assert privacy.subsampled_rho(rho_step, 0.25) == pytest.approx(
+        0.25 * rho_step)
+    with pytest.raises(ValueError):
+        privacy.subsampled_rho(rho_step, 0.0)
+    with pytest.raises(ValueError):
+        privacy.subsampled_rho(rho_step, 1.5)
+
+
+def test_accountant_subsampled_steps_strictly_below_full():
+    """Same round count: q < 1 participation yields strictly lower
+    max_epsilon than q = 1 — even for a client sampled EVERY round, whose
+    per-step rho still carries the amplification factor q."""
+    def run(q, rounds=10, tau=5):
+        acc = privacy.PrivacyAccountant(clip_norm=1.0, delta=1e-4)
+        for m in range(4):
+            acc.register_client(m, 32, 1.5)
+        for _ in range(rounds):
+            acc.step(tau, clients=[0, 1], q=q)   # worst clients always in
+        return acc
+    full = run(1.0)
+    half = run(0.5)
+    assert half.max_epsilon() < full.max_epsilon()
+    # exact ledger: rho scales linearly with q for a fixed participant set
+    assert half.rho(0) == pytest.approx(0.5 * full.rho(0), rel=1e-12)
+    # non-participants spent nothing
+    assert half.rho(2) == 0.0 and half.epsilon(2) == 0.0
+    # the pre-round probe carries the same amplification
+    assert half.peek_epsilon(5, q=0.5) < full.peek_epsilon(5, q=1.0)
