@@ -110,7 +110,7 @@ def estimate_constants(case: Case, probe_rounds: int = 30) -> ProblemConstants:
     for _ in range(probe_rounds):
         batch = round_batch(spec, sampler, probe_rng)
         state, rec = run_round(spec, state, batch, check_budgets=False)
-        losses.append(rec["loss"])
+        losses.append(float(rec["loss"]))   # records are lazy device scalars
     l0, lstar = losses[0], min(losses)
     alpha = max(l0 - lstar, 1e-3) + 0.05
     # strong convexity: fit exponential decay rate of the loss gap

@@ -1,0 +1,182 @@
+"""Driver-throughput benchmark: per-round vs fused multi-round training.
+
+Measures end-to-end ``repro.api.train`` throughput (rounds/s and
+local-steps/s, batch building + prefetch + ledger included) on a fixed
+small CPU reference federation, across engine x chunk_rounds x compressor,
+and emits ``BENCH_throughput.json`` so every future PR has a perf
+trajectory to beat. ``chunk_rounds=1`` is the per-round driver (one XLA
+dispatch and >=1 blocking host sync per round); ``chunk_rounds=R`` lowers R
+rounds into one ``lax.scan`` dispatch with at most one blocking sync per
+chunk (``host_syncs_per_round`` reports that driver-structural count: the
+materialize/mask fetch for the per-round driver, 1/R for the fused one).
+
+Reading the numbers: the PIPELINE configs (compressor / partial
+participation — the paper's resource-constrained IoT setting) are where
+the fusion is structural: the per-round driver must block on the realized
+participation mask every round, the fused driver once per chunk, giving a
+stable ~2-4x. The dense full-participation protocol has no forced
+per-round sync left (this PR's lazy records + cached ledger constants
+removed them), so jax async dispatch already pipelines it and its fused
+gain is whatever python/dispatch overhead remains on the host — real but
+machine-dependent. ``--check`` therefore gates only the sync-bound
+pipeline configs (threshold 0.8 for CI-runner noise; healthy margin is
+>= 2x) and reports the dense rows informationally.
+
+    PYTHONPATH=src python benchmarks/throughput.py            # full grid
+    PYTHONPATH=src python benchmarks/throughput.py --smoke --check
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.api import FederationSpec, init_state, train
+from repro.models.linear import init_linear, logreg_loss
+from repro.optim import sgd
+
+# fixed CPU reference federation: small enough that driver overhead (the
+# thing this benchmark tracks) dominates — per-round host cost is fixed
+# while device compute scales with tau*dim*batch, so keep all three small,
+# but big enough to do real math
+C, TAU, DIM, BATCH = 8, 2, 32, 8
+SIGMA, LR, CLIP = 0.5, 0.3, 1.0
+
+
+def reference_spec(engine: str, compressor: str, participation: float,
+                   **kw) -> FederationSpec:
+    extra = {}
+    if compressor != "none":
+        extra["compression_ratio"] = 0.25
+    # kernel_backend pinned to the jnp oracle: on CPU "auto" resolves to the
+    # pallas interpret kernel, a ~100x-slower correctness rehearsal that
+    # would swamp the driver overhead this benchmark tracks
+    extra.update(kw)
+    extra.setdefault("kernel_backend", "ref")
+    return FederationSpec(
+        n_clients=C, tau=TAU, loss_fn=logreg_loss, optimizer=sgd(LR),
+        engine=engine, dp=True, clip_norm=CLIP,
+        participation=participation, compressor=compressor,
+        sigmas=(SIGMA,) * C, batch_sizes=(BATCH,) * C, **extra)
+
+
+def make_sampler(dim: int = DIM, batch: int = BATCH):
+    def sampler(m, tau, rng):
+        return {"x": rng.normal(size=(tau, batch, dim)).astype(np.float32),
+                "y": rng.integers(0, 2, size=(tau, batch)).astype(np.int32)}
+    return sampler
+
+
+def time_driver(spec: FederationSpec, rounds: int, chunk_rounds: int,
+                repeats: int) -> dict:
+    """Best-of-``repeats`` wall time of ``train(..., chunk_rounds=...)``,
+    after one untimed warm-up run that pays all XLA compiles (min filters
+    scheduler noise; both drivers get the same treatment)."""
+    sampler = make_sampler()
+
+    def one_run(n_rounds: int) -> float:
+        state = init_state(spec, init_linear(DIM))
+        t0 = time.perf_counter()
+        state, out = train(spec, state, sampler, max_rounds=n_rounds,
+                           chunk_rounds=chunk_rounds)
+        jax.block_until_ready(state.params)
+        assert out["rounds"] == n_rounds
+        return time.perf_counter() - t0
+
+    one_run(min(rounds, max(1, chunk_rounds)))          # compile warm-up
+    wall = min(one_run(rounds) for _ in range(repeats))
+    # blocking syncs per round, from the driver structure: the per-round
+    # driver materializes each record (plus the mask fetch under a
+    # pipeline spec); the fused driver blocks once per chunk
+    syncs = ((1.0 + (1.0 if spec.has_pipeline() else 0.0))
+             if chunk_rounds <= 1 else 1.0 / chunk_rounds)
+    return {
+        "engine": spec.engine, "compressor": spec.compressor,
+        "participation": spec.participation_fraction(),
+        "chunk_rounds": chunk_rounds, "rounds": rounds,
+        "wall_s": round(wall, 4),
+        "rounds_per_s": round(rounds / wall, 2),
+        "local_steps_per_s": round(rounds * TAU / wall, 2),
+        "host_syncs_per_round": syncs,
+    }
+
+
+def run_grid(smoke: bool) -> dict:
+    if smoke:
+        grid = [("vmap", "none", 1.0), ("vmap", "topk", 0.5)]
+        chunks, rounds, repeats = (1, 8), 24, 3
+    else:
+        grid = [("vmap", "none", 1.0), ("vmap", "topk", 0.5),
+                ("vmap", "qsgd", 1.0), ("map", "none", 1.0),
+                ("shard_map", "none", 1.0), ("shard_map", "topk", 0.5)]
+        chunks, rounds, repeats = (1, 2, 8), 64, 5
+    results = []
+    for engine, compressor, participation in grid:
+        spec = reference_spec(engine, compressor, participation)
+        for chunk in chunks:
+            r = time_driver(spec, rounds, chunk, repeats)
+            results.append(r)
+            print(f"{engine:10s} {compressor:5s} q={participation:<4} "
+                  f"chunk={chunk:<3} {r['rounds_per_s']:>8.1f} rounds/s "
+                  f"({r['local_steps_per_s']:.0f} steps/s, "
+                  f"{r['host_syncs_per_round']:.3f} syncs/round)")
+    speedups = {}
+    for engine, compressor, participation in grid:
+        sel = {r["chunk_rounds"]: r["rounds_per_s"] for r in results
+               if (r["engine"], r["compressor"], r["participation"])
+               == (engine, compressor, float(participation))}
+        base = sel[1]
+        top = max(k for k in sel if k > 1)
+        speedups[f"{engine}/{compressor}/q{participation}"] = round(
+            sel[top] / base, 2)
+    return {
+        "bench": "throughput",
+        "config": {"n_clients": C, "tau": TAU, "dim": DIM, "batch": BATCH,
+                   "sigma": SIGMA, "rounds": rounds, "smoke": smoke},
+        "jax": jax.__version__,
+        "device": str(jax.devices()[0]),
+        "results": results,
+        "speedup_fused_vs_per_round": speedups,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced grid for CI (vmap only, 24 rounds)")
+    ap.add_argument("--check", action="store_true",
+                    help="fail if any fused config regresses below the "
+                         "per-round driver (with a noise margin: speedup "
+                         "< 0.8 fails — a real regression lands far below, "
+                         "the healthy margin is >= 2x)")
+    ap.add_argument("--out", default="BENCH_throughput.json")
+    args = ap.parse_args(argv)
+
+    report = run_grid(args.smoke)
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    print(f"wrote {args.out}")
+    if args.check:
+        # gate only the pipeline configs, where the fused speedup is
+        # structural (per-round mask sync vs 1/chunk) rather than
+        # machine-dependent; 0.8 not 1.0 because the smoke walls are
+        # sub-second and a scheduler stall on a shared CI runner can shave
+        # tens of percent — a genuine chunking regression collapses the
+        # ~3x margin entirely
+        slow = {k: v for k, v in
+                report["speedup_fused_vs_per_round"].items()
+                if "/none/q1.0" not in k and v < 0.8}
+        if slow:
+            print(f"REGRESSION: fused driver slower than per-round: {slow}")
+            return 1
+        print("throughput gate passed: fused driver within margin "
+              f"(speedups: {report['speedup_fused_vs_per_round']})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

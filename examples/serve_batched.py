@@ -65,7 +65,7 @@ for _ in range(2):
     per_client = [stream.sampler(m, TAU, rng) for m in range(C)]
     batch = jax.tree.map(lambda *xs: np.stack(xs), *per_client)
     state, rec = run_round(spec, state, batch, check_budgets=False)
-print(f"federated 2 rounds (q=0.5, topk 25%): loss={rec['loss']:.3f} "
+print(f"federated 2 rounds (q=0.5, topk 25%): loss={float(rec['loss']):.3f} "
       f"participants/round={int(rec['participants'])} "
       f"comm cost x{spec.comm_scale():.3f}")
 

@@ -11,8 +11,11 @@ Declarative spec, pluggable engines, pure functional state:
     state, out = train(spec, state, sampler, eval_fn=eval_fn)
 
 or drive rounds yourself with ``run_round(spec, state, batch)`` — budget
-checks (``PrivacyAccountant.peek_epsilon``) raise :class:`BudgetExceeded`
-before a round would overrun eps_th / C_th. Engines ("vmap" | "map" |
+checks (incremental ``peek_epsilon_fast``) raise :class:`BudgetExceeded`
+before a round would overrun eps_th / C_th. ``run_rounds`` fuses a chunk of
+R rounds into one jitted ``lax.scan`` (one dispatch, <=1 host sync per
+chunk, bit-identical to the per-round loop); ``train(chunk_rounds=R)``
+drives it with a double-buffered batch prefetcher. Engines ("vmap" | "map" |
 "shard_map" | "auto") are selected purely via ``FederationSpec.engine``;
 ``register_engine`` plugs in new execution strategies. The mutable
 :class:`Federation` is a back-compat wrapper over the functional core.
@@ -20,6 +23,7 @@ before a round would overrun eps_th / C_th. Engines ("vmap" | "map" |
 from repro.api.engines import (
     RoundEngine,
     available_engines,
+    chunked_round_fn_for,
     get_engine,
     register_engine,
     resolve_engine,
@@ -36,20 +40,29 @@ from repro.api.state import (
     exceeds_budgets,
     init_state,
     load_state,
+    materialize_record,
     max_epsilon,
+    peek_epsilon_fast,
+    PrefetchFailed,
     round_batch,
+    round_batches,
+    rounds_within_budgets,
     run_round,
+    run_rounds,
     save_state,
+    sigmas_for,
     train,
 )
 
 __all__ = [
     "COMPRESSORS", "ENGINES", "FederationSpec",
-    "RoundEngine", "available_engines", "get_engine", "register_engine",
-    "resolve_engine", "round_fn_for",
+    "RoundEngine", "available_engines", "chunked_round_fn_for", "get_engine",
+    "register_engine", "resolve_engine", "round_fn_for",
     "BudgetExceeded", "FLState", "accountant_view", "collapse_clients",
     "eval_params",
-    "exceeds_budgets", "init_state", "load_state", "max_epsilon",
-    "round_batch", "run_round", "save_state", "train",
+    "exceeds_budgets", "init_state", "load_state", "materialize_record",
+    "max_epsilon", "peek_epsilon_fast", "PrefetchFailed",
+    "round_batch", "round_batches", "rounds_within_budgets",
+    "run_round", "run_rounds", "save_state", "sigmas_for", "train",
     "Federation",
 ]

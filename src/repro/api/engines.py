@@ -35,6 +35,14 @@ Every engine's Eq.-7a clip+noise step runs through the fused
 selected by ``FederationSpec.kernel_backend`` and carried to the gradient
 builder by ``spec.fl_config()``; it is part of ``spec.engine_key()``, so
 switching backends recompiles rather than aliasing cached rounds.
+
+Two jitted forms are cached: the single round (:func:`round_fn_for`, per
+engine key) and the fused multi-round scan (:func:`chunked_round_fn_for`,
+per engine key + participant count — the scan bakes the per-round mask
+sampling in) that lowers a whole chunk of rounds into one XLA program. Both donate the
+params/opt_state/residual operands — the input FLState's device buffers are
+consumed and reused in place (§Perf opt: no double-buffered client
+replicas); callers continue from the returned state.
 """
 from __future__ import annotations
 
@@ -144,24 +152,70 @@ def build_shard_map_engine(spec: FederationSpec) -> RoundFn:
                                 pipeline=spec.aggregation_pipeline())
 
 
-# compiled-round cache: keyed on the engine-relevant slice of the spec, so
+# compiled-round caches: keyed on the engine-relevant slice of the spec, so
 # budget edits (spec.replace(eps_th=...)) reuse the compiled function.
 # Bounded LRU: engine keys hold loss/optimizer closures and XLA executables,
 # so an unbounded map would leak across spec sweeps.
 _ROUND_FN_CACHE: dict[tuple, RoundFn] = {}
+_CHUNKED_FN_CACHE: dict[tuple, RoundFn] = {}
 _ROUND_FN_CACHE_MAX = 32
 
 
-def round_fn_for(spec: FederationSpec) -> RoundFn:
-    """The jitted round function for ``spec`` (cached per engine key)."""
-    key = spec.engine_key()
-    fn = _ROUND_FN_CACHE.pop(key, None)
+def _cached(cache: dict, key, build) -> RoundFn:
+    fn = cache.pop(key, None)
     if fn is None:
-        fn = jax.jit(get_engine(resolve_engine(spec))(spec))
-        while len(_ROUND_FN_CACHE) >= _ROUND_FN_CACHE_MAX:
-            _ROUND_FN_CACHE.pop(next(iter(_ROUND_FN_CACHE)))
-    _ROUND_FN_CACHE[key] = fn      # (re)insert at MRU position
+        fn = build()
+        while len(cache) >= _ROUND_FN_CACHE_MAX:
+            cache.pop(next(iter(cache)))
+    cache[key] = fn                # (re)insert at MRU position
     return fn
+
+
+def round_fn_for(spec: FederationSpec) -> RoundFn:
+    """The jitted round function for ``spec`` (cached per engine key).
+
+    Donation: the params / opt_state / error-feedback-residual operands are
+    donated to XLA, so big-model client replicas update in place instead of
+    double-buffering every round. Callers must treat the input FLState's
+    device buffers as CONSUMED on a successful call — ``run_round`` returns
+    the successor state; keep using that. (Host-side copies, e.g. a
+    checkpoint written before the call, are unaffected.)
+    """
+    donate = (0, 1, 6) if spec.has_pipeline() else (0, 1)
+    return _cached(
+        _ROUND_FN_CACHE, spec.engine_key(),
+        lambda: jax.jit(get_engine(resolve_engine(spec))(spec),
+                        donate_argnums=donate))
+
+
+def chunked_round_fn_for(spec: FederationSpec) -> RoundFn:
+    """The jitted fused-multi-round scan for ``spec``: the engine's round
+    body wrapped by :func:`repro.core.fl.make_chunked_round`, with the same
+    donation contract as :func:`round_fn_for` (params / opt_state /
+    residual update in place). One wrapper serves every chunk length — the
+    scan reads R from the batches operand at trace time, so jit's own
+    shape-keyed cache holds one executable per R. Operand/return shapes are
+    documented on ``make_chunked_round``; ``repro.api.state.run_rounds`` is
+    the driver that feeds it."""
+    from repro.core.fl import make_chunked_round
+
+    pipeline = spec.has_pipeline()
+
+    def build():
+        raw = get_engine(resolve_engine(spec))(spec)
+        chunk = make_chunked_round(
+            raw, pipeline=pipeline, n_clients=spec.n_clients,
+            n_participants=spec.participants_per_round())
+        return jax.jit(chunk, donate_argnums=(0, 1, 5) if pipeline
+                       else (0, 1))
+
+    # unlike round_fn_for — where the mask is a runtime operand and
+    # engine_key() is the whole story — the chunk samples masks inside the
+    # scan, so the participant count is baked into the closure and must key
+    # the cache, or a participation sweep would reuse the wrong protocol
+    return _cached(_CHUNKED_FN_CACHE,
+                   (spec.engine_key(), spec.participants_per_round()),
+                   build)
 
 
 assert set(ENGINES) - {"auto"} == set(_REGISTRY), "built-in engines drifted"

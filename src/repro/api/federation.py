@@ -112,6 +112,7 @@ class Federation:
         spent = self.state.resource_spent
         self.state, rec = api_state.run_round(self.spec, self.state, batch,
                                               check_budgets=False)
+        rec = api_state.materialize_record(rec)
         self.state = self.state.replace(resource_spent=spent)
         rec["resource_spent"] = spent
         self._sync_accountant()

@@ -232,6 +232,26 @@ class FederationSpec:
                              list(self.resolved_batch_sizes()),
                              self.eps_th, self.delta)
 
+    def ledger_key(self) -> tuple:
+        """Hash key of everything that shapes the privacy ledger's per-step
+        charges and the device-resident sigma vector. ``repro.api.state``
+        caches both per ledger key (the cached-sigma transfer and the
+        incremental budget probe of the fused driver), so budget edits via
+        ``replace(eps_th=..., c_th=...)`` with explicit sigmas reuse the
+        cached constants, while any change to the mechanism (clip norm,
+        sigmas, batch sizes) repopulates them.
+
+        Memoized on the (frozen) instance: probing it several times per
+        round must not re-run the O(C) Eq.-23 sigma design. ``replace()``
+        builds a fresh instance, so edits never see a stale key."""
+        cached = self.__dict__.get("_ledger_key")
+        if cached is None:
+            cached = (self.clip_norm, self.dp,
+                      tuple(float(s) for s in self.resolved_sigmas()),
+                      self.resolved_batch_sizes())
+            object.__setattr__(self, "_ledger_key", cached)
+        return cached
+
     def engine_key(self) -> tuple:
         """Hash key of everything that shapes the compiled round function.
 

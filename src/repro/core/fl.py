@@ -92,6 +92,17 @@ def make_local_round(grad_fn: Callable, optimizer: Optimizer, tau: int):
     return local_round
 
 
+def pipeline_round_keys(key, n_clients: int):
+    """The per-round PRNG schedule of the pipeline engines: one local-round
+    key and one aggregation (compressor) key per client, derived from a
+    single round key. Shared by the GSPMD and shard_map builders so their
+    key/compressor streams stay bit-identical and parity-testable."""
+    key, agg_key = jax.random.split(key)
+    keys = jax.random.split(key, n_clients)
+    agg_keys = jax.random.split(agg_key, n_clients)
+    return keys, agg_keys
+
+
 def make_round_step(loss_fn: Callable, optimizer: Optimizer, cfg: FLConfig,
                     topology: str = "full_average", pipeline=None):
     """Build ``round_step(params, opt_state, batch, key, sigmas)``.
@@ -138,16 +149,18 @@ def make_round_step(loss_fn: Callable, optimizer: Optimizer, cfg: FLConfig,
             avg = tree_mean_over_axis0(new_p)
             new_p = tree_broadcast_axis0(avg, cfg.n_clients)
             if cfg.average_opt_state:
-                new_s = tree_broadcast_axis0(tree_mean_over_axis0(new_s),
-                                             cfg.n_clients)
+                # keep_dtype: int leaves (step counters) must come back as
+                # ints or the round is carry-unstable under scan chunking,
+                # undonatable, and retraced on its second call
+                new_s = tree_broadcast_axis0(
+                    tree_mean_over_axis0(new_s, keep_dtype=True),
+                    cfg.n_clients)
         ms = jax.tree.map(jnp.mean, ms)
         return new_p, new_s, ms
 
     def round_step_pipeline(params, opt_state, batch, key, sigmas, mask,
                             residual):
-        key, agg_key = jax.random.split(key)
-        keys = jax.random.split(key, cfg.n_clients)
-        agg_keys = jax.random.split(agg_key, cfg.n_clients)
+        keys, agg_keys = pipeline_round_keys(key, cfg.n_clients)
         new_p, new_s, ms = _local_rounds(params, opt_state, batch, keys,
                                          sigmas)
         new_p, new_s, residual = pipeline.aggregate(
@@ -156,6 +169,66 @@ def make_round_step(loss_fn: Callable, optimizer: Optimizer, cfg: FLConfig,
         return new_p, new_s, residual, ms
 
     return round_step if pipeline is None else round_step_pipeline
+
+
+def make_chunked_round(round_fn: Callable, *, pipeline: bool = False,
+                       n_clients: int | None = None,
+                       n_participants: int | None = None) -> Callable:
+    """Fuse R rounds of ``round_fn`` into one ``lax.scan`` program (§Perf
+    opt: the multi-round hot loop becomes device-resident — one XLA dispatch
+    and one host sync per chunk instead of per round).
+
+    Without a pipeline the returned function is
+
+        chunk_fn(params, opt_state, batches, key, sigmas)
+            -> (params, opt_state, key, metrics)
+
+    with ``batches`` leaves shaped (R, C, tau, B, ...) — the R stacked round
+    batches — and metrics leaves stacked (R,). With ``pipeline=True`` it is
+
+        chunk_fn(params, opt_state, batches, key, sigmas, residual)
+            -> (params, opt_state, key, residual, metrics, masks)
+
+    where the per-round participation masks (returned stacked (R, C) so the
+    host ledger can replay the realized sets) are sampled INSIDE the scan
+    from the carried key with exactly ``repro.api.state.run_round``'s split
+    schedule — the chunk is bit-identical to R sequential run_round calls.
+    The chunk length R is read from ``batches`` at trace time, so one
+    returned function serves every chunk size (jit retraces per R)."""
+    if pipeline:
+        if n_clients is None or n_participants is None:
+            raise ValueError("pipeline chunking needs n_clients and "
+                             "n_participants to sample masks inside the scan")
+        from repro.core.aggregation import participation_mask
+
+        def chunk_fn_pipeline(params, opt_state, batches, key, sigmas,
+                              residual):
+            def body(carry, batch):
+                p, s, k, r = carry
+                k, sub = jax.random.split(k)
+                sub, mask_key = jax.random.split(sub)
+                mask = participation_mask(mask_key, n_clients, n_participants)
+                p, s, r, ms = round_fn(p, s, batch, sub, sigmas, mask, r)
+                return (p, s, k, r), (ms, mask)
+
+            (params, opt_state, key, residual), (ms, masks) = jax.lax.scan(
+                body, (params, opt_state, key, residual), batches)
+            return params, opt_state, key, residual, ms, masks
+
+        return chunk_fn_pipeline
+
+    def chunk_fn(params, opt_state, batches, key, sigmas):
+        def body(carry, batch):
+            p, s, k = carry
+            k, sub = jax.random.split(k)
+            p, s, ms = round_fn(p, s, batch, sub, sigmas)
+            return (p, s, k), ms
+
+        (params, opt_state, key), ms = jax.lax.scan(
+            body, (params, opt_state, key), batches)
+        return params, opt_state, key, ms
+
+    return chunk_fn
 
 
 @dataclass

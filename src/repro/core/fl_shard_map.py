@@ -18,6 +18,12 @@ unifies the call signature with the GSPMD engines. The per-step clip+noise
 inside each shard follows ``FLConfig.kernel_backend`` (see
 :mod:`repro.kernels.dispatch`), identically to the GSPMD engines — the
 Pallas kernel composes under ``shard_map`` + ``vmap`` + ``scan``.
+
+The built round also composes under the fused multi-round chunking of
+:func:`repro.core.fl.make_chunked_round` (an outer ``lax.scan`` carrying
+params/opt_state/key/residual with the per-round collective inside) and
+under ``jax.jit`` buffer donation — every carried operand keeps its dtype
+across the round, so donated client replicas are reused in place.
 """
 from __future__ import annotations
 
@@ -27,7 +33,13 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.fl import FLConfig, TOPOLOGIES, make_grad_fn, make_local_round
+from repro.core.fl import (
+    FLConfig,
+    TOPOLOGIES,
+    make_grad_fn,
+    make_local_round,
+    pipeline_round_keys,
+)
 from repro.optim.optimizers import Optimizer
 from repro.utils.tree import tree_broadcast_axis0
 
@@ -130,9 +142,7 @@ def make_shard_map_round(loss_fn: Callable, optimizer: Optimizer,
 
     def round_step_pipeline(params, opt_state, batch, key, sigmas, mask,
                             residual):
-        key, agg_key = jax.random.split(key)
-        keys = jax.random.split(key, cfg.n_clients)
-        agg_keys = jax.random.split(agg_key, cfg.n_clients)
+        keys, agg_keys = pipeline_round_keys(key, cfg.n_clients)
         return smapped(params, opt_state, batch, keys, agg_keys, sigmas,
                        mask, residual)
 

@@ -16,6 +16,8 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass, field
 
+import numpy as np
+
 
 def gaussian_zcdp(sensitivity: float, sigma: float) -> float:
     """Lemma 2: rho of one Gaussian-mechanism release."""
@@ -67,6 +69,17 @@ def subsampled_rho(rho_step: float, q: float) -> float:
     if not 0.0 < q <= 1.0:
         raise ValueError(f"participation rate q must be in (0, 1], got {q}")
     return q * rho_step
+
+
+def per_step_charges(rho_steps, q: float):
+    """Vectorized :func:`subsampled_rho` over a (C,) per-step rho vector —
+    THE per-realized-local-step charge expression of every ledger surface
+    (``PrivacyAccountant.step``/``step_many`` and the incremental probes of
+    ``repro.api.state``). Keeping it here means a change to the
+    amplification model cannot desynchronize the probe from the ledger."""
+    if not 0.0 < q <= 1.0:
+        raise ValueError(f"participation rate q must be in (0, 1], got {q}")
+    return q * np.asarray(rho_steps, np.float64)
 
 
 def epsilon_after_k(k: int, clip_norm: float, batch_size: int, sigma: float,
@@ -153,6 +166,56 @@ class PrivacyAccountant:
             self._rho[m] += n_steps * subsampled_rho(
                 gaussian_zcdp(sens, self.sigmas[m]), q)
         self.steps += n_steps
+
+    def step_many(self, taus, masks=None, q: float = 1.0) -> np.ndarray:
+        """Vectorized ledger replay of a chunk of rounds.
+
+        ``taus`` are the per-round local-step counts (R,); ``masks`` the
+        stacked realized 0/1 participation masks (R, C), columns aligned to
+        the sorted registered client ids (``None`` -> every client
+        participates every round). Per client, the per-round increments are
+        applied in round order with the same floating-point expression as
+        :meth:`step`, so the resulting ledger is bit-for-bit identical to R
+        sequential ``step(tau_r, clients=participants_r, q=q)`` calls — the
+        conditional per-round ledger stays the source of truth; the fused
+        multi-round driver merely replays it in O(R) numpy row operations
+        instead of O(R*C) Python dict updates.
+
+        Returns the (R,) worst-client rho trajectory (after each round), so
+        chunked drivers can materialize per-round epsilon records without a
+        second replay.
+        """
+        clients = sorted(self.batch_sizes)
+        if not clients:
+            raise ValueError("no clients registered")
+        taus = [int(t) for t in taus]
+        if any(t < 0 for t in taus):
+            raise ValueError("n_steps must be >= 0")
+        if masks is not None:
+            masks = np.asarray(masks)
+            if masks.shape != (len(taus), len(clients)):
+                raise ValueError(f"masks shape {masks.shape} != "
+                                 f"({len(taus)}, {len(clients)})")
+        # identical per-step charge expression as step():
+        #   n_steps * subsampled_rho(gaussian_zcdp(sens_m, sigma_m), q)
+        charge = per_step_charges(
+            [gaussian_zcdp(grad_sensitivity(self.clip_norm,
+                                            self.batch_sizes[m]),
+                           self.sigmas[m]) for m in clients], q)
+        rho = np.asarray([self._rho[m] for m in clients], np.float64)
+        worst = np.empty((len(taus),), np.float64)
+        for r, tau in enumerate(taus):
+            inc = tau * charge
+            if masks is not None:
+                # where (not *): 0 * inf charges (sigma=0 clients) are NaN,
+                # and step() never touches non-participants at all
+                inc = np.where(masks[r] > 0, inc, 0.0)
+            rho = rho + inc
+            worst[r] = np.max(rho)
+        for i, m in enumerate(clients):
+            self._rho[m] = float(rho[i])
+        self.steps += sum(taus)
+        return worst
 
     def rho(self, client: int) -> float:
         return self._rho.get(client, 0.0)

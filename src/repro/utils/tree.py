@@ -48,8 +48,29 @@ def tree_bytes(a) -> int:
     return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(a))
 
 
-def tree_mean_over_axis0(a):
-    """Mean over a leading (client) axis of every leaf."""
+def tree_mean_over_axis0(a, keep_dtype: bool = False):
+    """Mean over a leading (client) axis of every leaf.
+
+    ``keep_dtype=True`` guarantees each mean comes back in its leaf's dtype.
+    Without it ``jnp.mean`` promotes int leaves to f32, which makes the
+    output pytree carry-unstable under ``lax.scan`` chunking, defeats
+    buffer donation (in/out dtype mismatch), and silently retraces the
+    jitted round on its second call. f32-and-wider float leaves take the
+    plain mean (full native precision); sub-f32 floats (bf16/f16) detour
+    through an f32 accumulation; integer leaves — whose replicas must agree
+    (optimizer step counters: every client steps in lockstep) — take the
+    first replica, exact at any magnitude where an f32 round-trip would
+    corrupt counters above 2^24."""
+    if keep_dtype:
+        def _mean_keep(x):
+            if jnp.issubdtype(x.dtype, jnp.integer):
+                return x[0]
+            if (jnp.issubdtype(x.dtype, jnp.floating)
+                    and jnp.finfo(x.dtype).bits >= 32):
+                return jnp.mean(x, axis=0)
+            return jnp.mean(x.astype(jnp.float32), axis=0).astype(x.dtype)
+
+        return jax.tree.map(_mean_keep, a)
     return jax.tree.map(lambda x: jnp.mean(x, axis=0), a)
 
 

@@ -168,8 +168,9 @@ def test_default_spec_bitwise_identical_to_pre_refactor(engine):
     assert str(jax.make_jaxpr(engine_fn)(*args)) == \
         str(jax.make_jaxpr(rs)(*args))
 
-    nxt, _ = run_round(spec, state, _batch(), check_budgets=False)
+    # want_p first: run_round donates state's buffers (args reuses them)
     want_p, _, _ = jax.jit(rs)(*args)
+    nxt, _ = run_round(spec, state, _batch(), check_budgets=False)
     for a, b in zip(jax.tree.leaves(nxt.params), jax.tree.leaves(want_p)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=1e-6, atol=1e-8)

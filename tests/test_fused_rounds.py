@@ -1,0 +1,385 @@
+"""Tests for the fused multi-round driver: run_rounds chunk/loop identity,
+the vectorized ledger replay, lazy metric records, cached ledger constants,
+the incremental budget probe, and the chunked train driver."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (
+    BudgetExceeded,
+    FederationSpec,
+    PrefetchFailed,
+    accountant_view,
+    exceeds_budgets,
+    init_state,
+    load_state,
+    materialize_record,
+    peek_epsilon_fast,
+    round_batches,
+    rounds_within_budgets,
+    run_round,
+    run_rounds,
+    save_state,
+    sigmas_for,
+    train,
+)
+from repro.models.linear import init_linear, logreg_loss
+from repro.optim import momentum, sgd
+
+C, TAU, DIM, B = 4, 3, 8, 4
+
+
+def _spec(**kw):
+    base = dict(n_clients=C, tau=TAU, loss_fn=logreg_loss, optimizer=sgd(0.2),
+                clip_norm=1.0, dp=True, sigmas=(0.5,) * C,
+                batch_sizes=(B,) * C)
+    base.update(kw)
+    return FederationSpec(**base)
+
+
+def _batch(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"x": np.asarray(rng.normal(size=(C, TAU, B, DIM)), np.float32),
+            "y": np.asarray(rng.integers(0, 2, size=(C, TAU, B)), np.int32)}
+
+
+def _stacked(n, seed0=0):
+    return jax.tree.map(lambda *xs: np.stack(xs),
+                        *[_batch(seed0 + i) for i in range(n)])
+
+
+def _sampler(m, tau, rng):
+    return {"x": rng.normal(size=(tau, B, DIM)).astype(np.float32),
+            "y": rng.integers(0, 2, size=(tau, B)).astype(np.int32)}
+
+
+def _assert_states_identical(a, b):
+    for x, y in zip(jax.tree.leaves(a.params), jax.tree.leaves(b.params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    for x, y in zip(jax.tree.leaves(a.opt_state),
+                    jax.tree.leaves(b.opt_state)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    np.testing.assert_array_equal(np.asarray(a.key), np.asarray(b.key))
+    np.testing.assert_array_equal(a.rho, b.rho)
+    assert (a.residual is None) == (b.residual is None)
+    if a.residual is not None:
+        np.testing.assert_array_equal(np.asarray(a.residual),
+                                      np.asarray(b.residual))
+    assert a.steps == b.steps
+    assert a.resource_spent == b.resource_spent
+    assert a.rounds_done == b.rounds_done
+
+
+# ---------------------- chunked-vs-loop identity gate ------------------------
+
+IDENTITY_SETTINGS = [
+    ("dense", {}),
+    ("participation", dict(participation=0.5)),
+    ("topk", dict(compressor="topk", compression_ratio=0.25,
+                  participation=0.5)),
+    ("randk", dict(compressor="randk", compression_ratio=0.25)),
+    ("qsgd", dict(compressor="qsgd", compression_bits=6)),
+    ("amplified", dict(participation=0.5, amplify_participation=True)),
+]
+
+
+@pytest.mark.parametrize("engine", ["vmap", "map", "shard_map"])
+@pytest.mark.parametrize("name,kw", IDENTITY_SETTINGS,
+                         ids=[n for n, _ in IDENTITY_SETTINGS])
+def test_run_rounds_bit_identical_to_loop(engine, name, kw):
+    """run_rounds(n=4) == four run_round calls, bit for bit: params,
+    opt_state, rho ledger, error-feedback residual, RNG key, resource
+    accounting — and matching per-round metrics records."""
+    spec = _spec(engine=engine, **kw)
+    params0 = init_linear(DIM)
+    n = 4
+
+    seq = init_state(spec, params0)
+    seq_recs = []
+    for i in range(n):
+        seq, rec = run_round(spec, seq, _batch(i), check_budgets=False)
+        seq_recs.append(materialize_record(rec))
+
+    fused = init_state(spec, params0)
+    fused, recs = run_rounds(spec, fused, _stacked(n), n, check_budgets=False)
+
+    _assert_states_identical(seq, fused)
+    assert len(recs) == n
+    for ra, rb in zip(seq_recs, (materialize_record(r) for r in recs)):
+        assert set(ra) == set(rb)
+        assert rb["loss"] == pytest.approx(ra["loss"], rel=1e-6)
+        assert rb["round"] == ra["round"]
+        assert rb["iterations"] == ra["iterations"]
+        assert rb["max_epsilon"] == ra["max_epsilon"]          # exact replay
+        assert rb["resource_spent"] == ra["resource_spent"]    # exact replay
+        assert rb["participants"] == ra["participants"]
+
+
+def test_run_rounds_infers_length_and_momentum_carry():
+    """n_rounds defaults to the stacked leading axis, and stateful
+    optimizers (momentum velocity + int step counter) carry through the
+    scan bit-identically."""
+    spec = _spec(optimizer=momentum(0.2, 0.9))
+    params0 = init_linear(DIM)
+    n = 3
+    seq = init_state(spec, params0)
+    for i in range(n):
+        seq, _ = run_round(spec, seq, _batch(i), check_budgets=False)
+    fused, recs = run_rounds(spec, init_state(spec, params0), _stacked(n),
+                             check_budgets=False)
+    assert len(recs) == n
+    _assert_states_identical(seq, fused)
+
+
+def test_checkpoint_resume_mid_chunk(tmp_path):
+    """A checkpoint written between chunks resumes onto the same trajectory
+    as one uninterrupted chunk: rounds [0,2) + save/load + rounds [2,4) ==
+    rounds [0,4)."""
+    spec = _spec(engine="vmap", participation=0.5, compressor="topk",
+                 compression_ratio=0.25)
+    params0 = init_linear(DIM)
+
+    full, _ = run_rounds(spec, init_state(spec, params0), _stacked(4), 4,
+                         check_budgets=False)
+
+    half, _ = run_rounds(spec, init_state(spec, params0), _stacked(2), 2,
+                         check_budgets=False)
+    save_state(str(tmp_path), half)
+    restored, _ = load_state(str(tmp_path), init_state(spec, params0))
+    resumed, _ = run_rounds(spec, restored, _stacked(2, seed0=2), 2,
+                            check_budgets=False)
+    _assert_states_identical(full, resumed)
+
+
+def test_participation_sweep_does_not_alias_cached_chunks():
+    """The participant count is baked into the compiled scan (masks are
+    sampled inside it), so specs differing only in participation must not
+    share a cached chunk fn."""
+    params0 = init_linear(DIM)
+    half = _spec(participation=0.5)
+    quarter = half.replace(participation=0.25)
+    assert half.engine_key() == quarter.engine_key()   # mask is runtime for
+    #   the single-round path; the chunk cache must still split them
+    _, recs_half = run_rounds(half, init_state(half, params0), _stacked(2),
+                              check_budgets=False)
+    _, recs_quarter = run_rounds(quarter, init_state(quarter, params0),
+                                 _stacked(2), check_budgets=False)
+    assert all(r["participants"] == 2.0 for r in recs_half)
+    assert all(r["participants"] == 1.0 for r in recs_quarter)
+
+
+def test_run_rounds_rejects_mismatched_length():
+    """An explicit n_rounds must match the stacked leading axis — the scan
+    length comes from the batches, so a mismatch would train more rounds
+    than the ledger charges."""
+    spec = _spec()
+    state = init_state(spec, init_linear(DIM))
+    with pytest.raises(ValueError, match="leading axis"):
+        run_rounds(spec, state, _stacked(4), 2, check_budgets=False)
+
+
+def test_best_tracks_eval_loss_not_train_loss():
+    """theta* with an eval_fn compares eval losses: a later round with the
+    better eval loss wins even when its train loss is worse."""
+    evals = iter([0.5, 0.3])
+
+    def eval_fn(params):
+        return {"eval_loss": next(evals)}
+
+    spec = _spec(c_th=1e9, eps_th=1e9)
+    state = init_state(spec, init_linear(DIM))
+    _, out = train(spec, state, _sampler, max_rounds=2, eval_fn=eval_fn)
+    assert out["best"]["round"] == 2
+    assert out["best"]["loss"] == pytest.approx(0.3)
+    assert out["best"]["eval_loss"] == pytest.approx(0.3)
+
+
+# ---------------------- budgets ----------------------------------------------
+
+def test_run_rounds_enforces_budgets_chunkwise():
+    """A chunk that cannot fully fit raises (state untouched), and the kind
+    matches the binding budget."""
+    spec = _spec(c_th=3 * (100.0 + TAU), eps_th=1e9)    # room for 3 rounds
+    state = init_state(spec, init_linear(DIM))
+    with pytest.raises(BudgetExceeded) as ei:
+        run_rounds(spec, state, _stacked(4), 4)
+    assert ei.value.which == "resource"
+    assert state.rounds_done == 0
+    state, recs = run_rounds(spec, state, _stacked(3), 3)
+    assert len(recs) == 3
+
+    tight = _spec(eps_th=0.5, sigmas=(0.05,) * C)
+    with pytest.raises(BudgetExceeded) as ei:
+        run_rounds(tight, init_state(tight, init_linear(DIM)), _stacked(2), 2)
+    assert ei.value.which == "privacy"
+
+
+def test_rounds_within_budgets_matches_per_round_probe():
+    """The chunk-sizing projection replays exceeds_budgets exactly under
+    full participation: it admits precisely the rounds the per-round driver
+    runs, and the (n+1)-th probe fails with the same budget kind."""
+    spec = _spec(c_th=2 * (100.0 + TAU) + 1.0, eps_th=1e9)
+    state = init_state(spec, init_linear(DIM))
+    n, which = rounds_within_budgets(spec, state, 10)
+    assert (n, which) == (2, "resource")
+    ran = 0
+    while not exceeds_budgets(spec, state) and ran < 10:
+        state, _ = run_round(spec, state, _batch(ran), check_budgets=False)
+        ran += 1
+    assert ran == n
+    assert rounds_within_budgets(spec, state, 10) == (0, "resource")
+
+
+def test_incremental_probe_matches_accountant_view():
+    """peek_epsilon_fast == the O(C) accountant rebuild it replaced, on a
+    state with an uneven realized ledger."""
+    spec = _spec(participation=1, sigmas=(0.3, 0.5, 0.7, 0.9),
+                 batch_sizes=(2, 4, 8, 16))
+    state = init_state(spec, init_linear(DIM))
+    for i in range(3):
+        state, _ = run_round(spec, state, _batch(i), check_budgets=False)
+    assert (state.rho > 0).any() and (state.rho == 0).any()
+    want = accountant_view(spec, state).peek_epsilon(
+        spec.tau, q=spec.accounting_q())
+    assert peek_epsilon_fast(spec, state, spec.tau) == want
+
+
+# ---------------------- laziness / caches ------------------------------------
+
+def test_records_are_lazy_device_scalars():
+    """run_round/run_rounds return metric values as 0-d device arrays (no
+    forced sync); materialize_record converts them to plain floats."""
+    spec = _spec()
+    state, rec = run_round(spec, init_state(spec, init_linear(DIM)),
+                           _batch(), check_budgets=False)
+    assert isinstance(rec["loss"], jax.Array)
+    assert isinstance(rec["max_epsilon"], float)     # host-side ledger field
+    mat = materialize_record(rec)
+    assert isinstance(mat["loss"], float)
+    assert mat["round"] == 1
+
+    _, recs = run_rounds(spec, init_state(spec, init_linear(DIM)),
+                         _stacked(2), 2, check_budgets=False)
+    assert all(isinstance(r["loss"], jax.Array) for r in recs)
+
+
+def test_sigma_and_ledger_constants_cached_per_spec():
+    """The device sigma vector is transferred once per ledger key: budget
+    edits reuse it, mechanism edits repopulate it. ledger_key itself is
+    memoized on the instance, so per-round probes of an auto-designed-sigma
+    spec don't re-run the Eq.-23 design."""
+    spec = _spec()
+    assert sigmas_for(spec) is sigmas_for(spec)
+    assert sigmas_for(spec) is sigmas_for(spec.replace(eps_th=3.0, c_th=9.0))
+    assert sigmas_for(spec) is not sigmas_for(spec.replace(sigmas=(0.7,) * C))
+    assert spec.ledger_key() is spec.ledger_key()
+    designed = _spec(sigmas=None, eps_th=4.0, total_steps=60)
+    assert designed.ledger_key() is designed.ledger_key()
+
+
+def test_prefetch_failure_keeps_completed_chunk():
+    """A sampler that dies while prefetching the NEXT chunk must not lose
+    the chunk that already executed: run_rounds raises PrefetchFailed with
+    the successor state attached, and train records the chunk's history
+    before re-raising the original error."""
+    spec = _spec(c_th=1e9, eps_th=1e9)
+
+    with pytest.raises(PrefetchFailed) as ei:
+        run_rounds(spec, init_state(spec, init_linear(DIM)), _stacked(2), 2,
+                   check_budgets=False,
+                   prefetch=lambda: (_ for _ in ()).throw(OSError("dead")))
+    assert isinstance(ei.value.__cause__, OSError)
+    assert ei.value.state.rounds_done == 2
+    assert len(ei.value.records) == 2
+
+    calls = {"n": 0}
+
+    def dying_sampler(m, tau, rng):
+        calls["n"] += 1
+        if calls["n"] > 3 * C:                 # survives the first chunk
+            raise OSError("stream closed")
+        return _sampler(m, tau, rng)
+
+    state = init_state(spec, init_linear(DIM))
+    history = []
+    with pytest.raises(OSError):
+        train(spec, state, dying_sampler, max_rounds=9, chunk_rounds=3,
+              history=history)
+    assert len(history) == 3                   # the executed chunk survived
+    assert all(isinstance(r["loss"], float) for r in history)
+
+
+# ---------------------- chunked train driver ---------------------------------
+
+def test_train_chunked_matches_per_round_driver():
+    """train(chunk_rounds=4) == train(chunk_rounds=1) under full
+    participation: same rounds, same per-round history, identical budget
+    stopping point (resource budget binds mid-run)."""
+    def run(chunk):
+        spec = _spec(c_th=6 * (100.0 + TAU) + 1.0, eps_th=1e9)
+        state = init_state(spec, init_linear(DIM))
+        return train(spec, state, _sampler, max_rounds=100,
+                     chunk_rounds=chunk)
+
+    state_a, out_a = run(1)
+    state_b, out_b = run(4)
+    assert out_a["rounds"] == out_b["rounds"] == 6
+    _assert_states_identical(state_a, state_b)
+    assert len(out_a["history"]) == len(out_b["history"])
+    for ra, rb in zip(out_a["history"], out_b["history"]):
+        assert rb["loss"] == pytest.approx(ra["loss"], rel=1e-6)
+        assert rb["max_epsilon"] == ra["max_epsilon"]
+    assert out_b["best"]["loss"] == pytest.approx(out_a["best"]["loss"],
+                                                  rel=1e-6)
+
+
+def test_train_chunked_with_eval_at_boundaries():
+    """eval_fn runs once per chunk boundary (mid-chunk models never exist);
+    theta* tracking uses those boundary evals."""
+    calls = []
+
+    def eval_fn(params):
+        calls.append(1)
+        return {"eval_loss": float(np.asarray(params["w"]).sum() ** 2)}
+
+    spec = _spec(c_th=1e9, eps_th=1e9)
+    state = init_state(spec, init_linear(DIM))
+    state, out = train(spec, state, _sampler, max_rounds=8, eval_fn=eval_fn,
+                       eval_every=1, chunk_rounds=4)
+    assert out["rounds"] == 8
+    assert len(calls) == 2                     # one eval per chunk
+    assert "eval_loss" in out["history"][3]
+    assert "eval_loss" in out["history"][7]
+    assert "eval_loss" not in out["history"][0]
+    assert "eval_loss" in out["best"]
+
+
+def test_train_chunked_partial_participation_stays_within_budget():
+    """Under partial participation the chunk sizing is conservative: the
+    chunked driver never exceeds the privacy budget and stops at a state
+    the per-round probe also rejects (or max_rounds)."""
+    kw = dict(participation=0.5, eps_th=6.0, sigmas=(2.0,) * C, c_th=1e9)
+    spec = _spec(**kw)
+    state = init_state(spec, init_linear(DIM))
+    state, out = train(spec, state, _sampler, max_rounds=50, chunk_rounds=4)
+    assert 0 < out["rounds"] < 50              # privacy budget bound the run
+    assert out["max_epsilon"] <= spec.eps_th
+    assert exceeds_budgets(spec, state) == "privacy"
+
+
+def test_donated_state_buffers_are_consumed():
+    """The donation contract: after run_round the INPUT state's device
+    buffers are gone — reusing them raises instead of silently computing
+    on freed memory. (XLA may decline to alias a donated buffer — e.g. the
+    forced multi-device host platform of the oracle-only CI leg — in which
+    case the input legally survives and there is nothing to assert.)"""
+    spec = _spec()
+    state = init_state(spec, init_linear(DIM))
+    nxt, _ = run_round(spec, state, _batch(), check_budgets=False)
+    jax.block_until_ready(nxt.params)          # successor fully usable
+    leaf = jax.tree.leaves(state.params)[0]
+    if not leaf.is_deleted():
+        pytest.skip("platform declined buffer donation")
+    with pytest.raises(RuntimeError):
+        np.asarray(leaf) + 1
