@@ -140,11 +140,9 @@ def run_dp_pasgd(case: Case, tau: int, c_th: float, eps_th: float,
     fed = case.fed
     k_max = int(c_th / (C1 / tau + C2) // tau * tau)
     k = k_budget or max(tau, k_max)
-    # accounted X_m capped at the batch the sampler actually draws: an X_m
-    # above it would claim a smaller sensitivity (2G/X_m) than the executed
-    # mechanism has; below it is conservative (small clients pay more noise)
-    x_m = [min(x, BATCH)
-           for x in fed.batch_sizes(BATCH, proportional=proportional_batches)]
+    # FederatedData.batch_sizes enforces the X_m <= executed-batch cap
+    # itself (an X_m above the sampled batch would under-claim sensitivity)
+    x_m = fed.batch_sizes(BATCH, proportional=proportional_batches)
     sig = design_sigmas(k, CLIP, x_m, eps_th, DELTA)
     spec = FederationSpec(n_clients=fed.n_clients, tau=tau,
                           loss_fn=case.loss_fn, optimizer=sgd(LR),

@@ -22,6 +22,13 @@ machine-dependent. ``--check`` therefore gates only the sync-bound
 pipeline configs (threshold 0.8 for CI-runner noise; healthy margin is
 >= 2x) and reports the dense rows informationally.
 
+A second scenario tracks **cohort scaling** (repro.population): rounds/s
+and the device-resident block bytes of a K = 8 cohort as the virtual
+population M grows 10^3 -> 10^6. Both must be flat in M — the population
+drivers gather only the sampled cohort, so M buys scenario scale, not
+device memory or dispatch cost. ``--check`` gates the byte-flatness
+exactly and the rounds/s within a noise margin.
+
     PYTHONPATH=src python benchmarks/throughput.py            # full grid
     PYTHONPATH=src python benchmarks/throughput.py --smoke --check
 """
@@ -37,6 +44,14 @@ import numpy as np
 from repro.api import FederationSpec, init_state, train
 from repro.models.linear import init_linear, logreg_loss
 from repro.optim import sgd
+from repro.population import (
+    UniformCohort,
+    cohort_batch,
+    device_block_bytes,
+    init_population_state,
+    synthetic_population,
+    train_population,
+)
 
 # fixed CPU reference federation: small enough that driver overhead (the
 # thing this benchmark tracks) dominates — per-round host cost is fixed
@@ -51,9 +66,10 @@ def reference_spec(engine: str, compressor: str, participation: float,
     extra = {}
     if compressor != "none":
         extra["compression_ratio"] = 0.25
-    # kernel_backend pinned to the jnp oracle: on CPU "auto" resolves to the
-    # pallas interpret kernel, a ~100x-slower correctness rehearsal that
-    # would swamp the driver overhead this benchmark tracks
+    # kernel_backend pinned to the jnp oracle so the measurement is
+    # identical on every platform ("auto" now resolves to ref off-TPU
+    # anyway — this benchmark is where the ~100x interpret-vs-oracle gap
+    # was measured and the auto ranking fixed)
     extra.update(kw)
     extra.setdefault("kernel_backend", "ref")
     return FederationSpec(
@@ -104,6 +120,53 @@ def time_driver(spec: FederationSpec, rounds: int, chunk_rounds: int,
     }
 
 
+def time_cohort_driver(m: int, rounds: int, chunk_rounds: int,
+                       repeats: int) -> dict:
+    """Cohort-scaling row: train a K = C cohort drawn from M virtual
+    clients (fused chunks, topk pipeline so the ClientStore residual path
+    is on the clock) and record rounds/s plus the device-resident block
+    bytes — both must be independent of M."""
+    spec = reference_spec("vmap", "topk", 1.0).replace(population=m,
+                                                       cohort_size=C)
+    pop = synthetic_population(m, dim=DIM, batch_size=BATCH, seed=0)
+
+    def one_run(n_rounds: int) -> float:
+        ps = init_population_state(spec, init_linear(DIM))
+        t0 = time.perf_counter()
+        ps, out = train_population(spec, ps, pop, max_rounds=n_rounds,
+                                   chunk_rounds=chunk_rounds)
+        jax.block_until_ready(ps.fl.params)
+        assert out["rounds"] == n_rounds
+        return time.perf_counter() - t0
+
+    one_run(max(1, chunk_rounds))               # compile warm-up
+    wall = min(one_run(rounds) for _ in range(repeats))
+    ps = init_population_state(spec, init_linear(DIM))
+    batch = cohort_batch(spec, pop, UniformCohort(spec.seed)(0, m, C),
+                         np.random.default_rng(0))
+    return {
+        "population": m, "cohort_size": C, "chunk_rounds": chunk_rounds,
+        "rounds": rounds, "wall_s": round(wall, 4),
+        "rounds_per_s": round(rounds / wall, 2),
+        "device_block_bytes": device_block_bytes(ps, batch),
+    }
+
+
+def run_cohort_scaling(smoke: bool) -> list[dict]:
+    if smoke:
+        ms, rounds, chunk, repeats = [1_000, 100_000], 16, 8, 2
+    else:
+        ms, rounds, chunk, repeats = [1_000, 100_000, 1_000_000], 32, 8, 3
+    rows = []
+    for m in ms:
+        r = time_cohort_driver(m, rounds, chunk, repeats)
+        rows.append(r)
+        print(f"population M={m:<9,} K={C} chunk={chunk:<3} "
+              f"{r['rounds_per_s']:>8.1f} rounds/s "
+              f"({r['device_block_bytes']:,} device bytes)")
+    return rows
+
+
 def run_grid(smoke: bool) -> dict:
     if smoke:
         grid = [("vmap", "none", 1.0), ("vmap", "topk", 0.5)]
@@ -140,6 +203,7 @@ def run_grid(smoke: bool) -> dict:
         "device": str(jax.devices()[0]),
         "results": results,
         "speedup_fused_vs_per_round": speedups,
+        "cohort_scaling": run_cohort_scaling(smoke),
     }
 
 
@@ -173,8 +237,25 @@ def main(argv=None) -> int:
         if slow:
             print(f"REGRESSION: fused driver slower than per-round: {slow}")
             return 1
+        # cohort scaling: device bytes must be EXACTLY flat in M (the
+        # K-block is the same program regardless of population), and
+        # rounds/s flat within noise (0.5: the biggest M must not halve
+        # throughput — a leak of M into the hot path collapses this)
+        rows = report["cohort_scaling"]
+        bytes_set = {r["device_block_bytes"] for r in rows}
+        if len(bytes_set) != 1:
+            print(f"REGRESSION: device block bytes vary with M: "
+                  f"{[(r['population'], r['device_block_bytes']) for r in rows]}")
+            return 1
+        base_rps = rows[0]["rounds_per_s"]
+        slow_pop = [r for r in rows if r["rounds_per_s"] < 0.5 * base_rps]
+        if slow_pop:
+            print(f"REGRESSION: cohort rounds/s degrades with M: {slow_pop}")
+            return 1
         print("throughput gate passed: fused driver within margin "
-              f"(speedups: {report['speedup_fused_vs_per_round']})")
+              f"(speedups: {report['speedup_fused_vs_per_round']}); "
+              f"cohort scaling flat over M "
+              f"({[r['population'] for r in rows]})")
     return 0
 
 

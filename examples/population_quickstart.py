@@ -1,0 +1,86 @@
+"""Population quickstart: DP-PASGD over 100,000 virtual IoT devices.
+
+Cross-device FL at IoT scale runs a small per-round *cohort* K drawn from a
+huge *population* M >> K (the paper's resource-constrained fleet, scaled to
+its intended setting). This script shows the whole ``repro.population``
+surface in ~1 minute on CPU:
+
+  1. synthesize a Dirichlet label-skew population of M = 100,000 virtual
+     clients — lazy: a client's data exists only while it is in a cohort,
+  2. declare the federation: ``FederationSpec(population=M, cohort_size=K)``
+     with ``n_clients = K`` (the device block IS the cohort; device memory
+     is bounded by K, independent of M),
+  3. train with the fused chunked driver (cohorts resample at chunk
+     boundaries) under a per-virtual-client privacy ledger held in the
+     host-side ClientStore,
+  4. compare uniform cohorts with the Beta-availability / dropout
+     heterogeneity model, and checkpoint/resume the population state.
+
+Run:  PYTHONPATH=src python examples/population_quickstart.py
+"""
+import tempfile
+
+import numpy as np
+
+from repro.api import FederationSpec
+from repro.models.linear import init_linear, logreg_loss
+from repro.optim import sgd
+from repro.population import (
+    HeterogeneousCohort,
+    device_block_bytes,
+    init_population_state,
+    load_population_state,
+    save_population_state,
+    synthetic_population,
+    train_population,
+)
+
+M, K = 100_000, 16            # population / per-round cohort
+DIM, BATCH, TAU = 20, 8, 5
+SIGMA, ROUNDS = 0.8, 24
+
+print(f"== 1. population: M={M:,} virtual clients, Dirichlet(0.3) skew ==")
+pop = synthetic_population(M, dim=DIM, batch_size=BATCH, alpha=0.3, seed=0)
+print(f"   lazy: client #71,231's shard is synthesized on demand -> "
+      f"{pop.sampler(71_231, 1, np.random.default_rng(0))['x'].shape}")
+
+print(f"== 2. spec: cohort_size=K={K} is the whole device block ==")
+spec = FederationSpec(
+    n_clients=K, tau=TAU, loss_fn=logreg_loss, optimizer=sgd(0.3),
+    clip_norm=1.0, dp=True, population=M, cohort_size=K,
+    compressor="topk", compression_ratio=0.25,     # IoT uplink budget
+    sigmas=(SIGMA,) * K, batch_sizes=(BATCH,) * K, eps_th=1e9, c_th=1e9)
+pstate = init_population_state(spec, init_linear(DIM))
+print(f"   cohort fraction K/M = {spec.cohort_fraction():.2e}; device block "
+      f"= {device_block_bytes(pstate):,} bytes regardless of M")
+
+print("== 3. train: fused chunks, cohorts resampled per chunk ==")
+pstate, out = train_population(spec, pstate, pop, max_rounds=ROUNDS,
+                               chunk_rounds=8)
+seen = int((pstate.store.rounds_participated > 0).sum())
+print(f"   rounds={out['rounds']}  loss {out['history'][0]['loss']:.4f} -> "
+      f"{out['history'][-1]['loss']:.4f}")
+print(f"   ledger: {seen}/{M:,} clients ever sampled; worst-client "
+      f"eps={out['max_epsilon']:.3f} (conditional per-realized-client "
+      f"ledger); residual rows held: {pstate.store.residual_rows()}")
+
+print("== 4. heterogeneity: Beta-availability fleet with 10% dropout ==")
+hetero = HeterogeneousCohort(seed=1, availability=(8.0, 2.0), dropout=0.1)
+hstate = init_population_state(spec, init_linear(DIM))
+hstate, hout = train_population(spec, hstate, pop, cohort_sampler=hetero,
+                                max_rounds=ROUNDS, chunk_rounds=8)
+part = hstate.store.rounds_participated
+print(f"   final loss {hout['history'][-1]['loss']:.4f}; busiest device ran "
+      f"{int(part.max())} rounds (availability skew the per-vid ledger "
+      f"tracks exactly)")
+
+print("== 5. checkpoint / resume the population state ==")
+with tempfile.TemporaryDirectory() as d:
+    save_population_state(d, pstate, extra={"note": "quickstart"})
+    resumed, extra = load_population_state(
+        d, init_population_state(spec, init_linear(DIM)))
+    assert resumed.fl.rounds_done == out["rounds"]
+    assert np.array_equal(resumed.store.rho, pstate.store.rho)
+    print(f"   restored round {resumed.fl.rounds_done} with "
+          f"{resumed.store.residual_rows()} sparse residual rows "
+          f"({extra['note']})")

@@ -46,6 +46,7 @@ from repro.api.state import (
     PrefetchFailed,
     round_batch,
     round_batches,
+    round_rho_charges,
     rounds_within_budgets,
     run_round,
     run_rounds,
@@ -62,7 +63,8 @@ __all__ = [
     "eval_params",
     "exceeds_budgets", "init_state", "load_state", "materialize_record",
     "max_epsilon", "peek_epsilon_fast", "PrefetchFailed",
-    "round_batch", "round_batches", "rounds_within_budgets",
+    "round_batch", "round_batches", "round_rho_charges",
+    "rounds_within_budgets",
     "run_round", "run_rounds", "save_state", "sigmas_for", "train",
     "Federation",
 ]

@@ -63,9 +63,23 @@ class FederationSpec:
     #   participation draw, NOT for a realized-heavy client; opt in when
     #   the subsampling-blind adversary model fits). Default False charges
     #   realized participants the full Lemma-2 rho: the worst-case
-    #   conditional ledger, sound for the executed mechanism.
+    #   conditional ledger, sound for the executed mechanism. In population
+    #   mode the amplification composes with the cohort ratio K/M
+    #   (privacy.composed_subsampling_q): a client realizes a step only if
+    #   sampled into the cohort AND participating within it.
     #   Accounting-only: not part of engine_key(), editable via replace()
     #   without recompiling.
+
+    # -- virtual client population (repro.population; cohort execution) ----
+    population: int | None = None   # M virtual clients behind a lazy
+    #   ClientPopulation; None -> the resident dense path. In population
+    #   mode ``n_clients`` IS the per-round cohort size K — the device
+    #   block holds K replicas and the population drivers gather only the
+    #   sampled cohort, so device memory is bounded by K independent of M.
+    cohort_size: int | None = None  # K; defaults to n_clients and must
+    #   equal it (the one device-block size there is). Accounting-only
+    #   like ``population``: M is NOT part of engine_key(), so population
+    #   sweeps at fixed K reuse one compiled round.
 
     # -- DP mechanism (Eq. 7a) ---------------------------------------------
     dp: bool = True
@@ -122,6 +136,33 @@ class FederationSpec:
                 "participation/compression shape the Eq.-7b aggregation and "
                 "require topology='full_average' (local_only never "
                 "communicates)")
+        if self.cohort_size is not None and self.population is None:
+            raise ValueError("cohort_size only makes sense with a "
+                             "population (FederationSpec(population=M))")
+        if self.population is not None:
+            if self.cohort_size is None:
+                object.__setattr__(self, "cohort_size", self.n_clients)
+            if self.cohort_size != self.n_clients:
+                raise ValueError(
+                    f"cohort_size ({self.cohort_size}) must equal n_clients "
+                    f"({self.n_clients}): in population mode n_clients IS "
+                    f"the device cohort block")
+            if self.population < self.n_clients:
+                raise ValueError(
+                    f"population ({self.population}) must be >= cohort size "
+                    f"({self.n_clients})")
+            if self.topology != "full_average":
+                raise ValueError("cohort execution re-broadcasts one global "
+                                 "model and requires topology='full_average'")
+            if self.batch_sizes and len(set(self.batch_sizes)) > 1:
+                raise ValueError(
+                    "population mode needs uniform batch_sizes: cohort "
+                    "slots host different virtual clients every round, so "
+                    "per-slot heterogeneity has no client to bind to")
+            if self.sigmas is not None and len(set(self.sigmas)) > 1:
+                raise ValueError(
+                    "population mode needs uniform sigmas (cohort slots "
+                    "are not stable client identities)")
         # normalize sequences to hashable tuples
         if self.sigmas is not None:
             object.__setattr__(self, "sigmas",
@@ -169,13 +210,32 @@ class FederationSpec:
         """Realized q = participants / n_clients (drives amplification)."""
         return self.participants_per_round() / self.n_clients
 
+    # -- population views ----------------------------------------------------
+    def is_population(self) -> bool:
+        """Cohort-execution mode: n_clients is a per-round cohort of K
+        drawn from ``population`` virtual clients (repro.population)."""
+        return self.population is not None
+
+    def cohort_fraction(self) -> float:
+        """K/M — the cohort subsampling rate over the population (1.0 in
+        the resident dense mode, where every client is in every round's
+        block)."""
+        if self.population is None:
+            return 1.0
+        return self.n_clients / self.population
+
     def accounting_q(self) -> float:
         """The q the privacy ledger charges per realized step: 1.0 (full
-        Lemma-2 rho, the sound conditional ledger) by default; the
-        participation fraction when ``amplify_participation`` opts into
-        the expectation-level subsampling amplification."""
-        return (self.participation_fraction() if self.amplify_participation
-                else 1.0)
+        Lemma-2 rho, the sound conditional ledger) by default; with
+        ``amplify_participation``, the composed probability that a given
+        client realizes a step in a given round — cohort sampling (K/M)
+        times within-cohort participation
+        (:func:`repro.core.privacy.composed_subsampling_q`)."""
+        if not self.amplify_participation:
+            return 1.0
+        from repro.core.privacy import composed_subsampling_q
+        return composed_subsampling_q(self.cohort_fraction(),
+                                      self.participation_fraction())
 
     def wire_ratio(self) -> float:
         """Compressed-update bytes as a fraction of the dense fp32 update
@@ -259,7 +319,11 @@ class FederationSpec:
         amplify_participation, ...) are excluded — changing them must NOT
         retrace or recompile the engine. Participation enters only as
         ``has_pipeline()``: the participant count itself is a runtime
-        operand (the mask), so q sweeps reuse one compiled round.
+        operand (the mask), so q sweeps reuse one compiled round. The
+        population size M is excluded too: the compiled round only ever
+        sees the K-block, so sweeping M at fixed K reuses one XLA program
+        (that exclusion is what makes cohort execution memory-bounded by
+        K, and the M == C identity gate literally the same executable).
         """
         return (self.loss_fn, self.optimizer, self.n_clients, self.tau,
                 self.clip_norm, self.dp, self.num_microbatches,

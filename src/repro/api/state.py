@@ -144,11 +144,13 @@ def _rho_steps(spec: FederationSpec) -> np.ndarray:
     return _ledger_cached(_RHO_STEP_CACHE, spec.ledger_key(), build)
 
 
-def _round_rho_charges(spec: FederationSpec) -> np.ndarray:
+def round_rho_charges(spec: FederationSpec) -> np.ndarray:
     """(C,) worst-case per-round rho increments: tau steps at the spec's
     accounting rate — the same expression ``PrivacyAccountant.step`` charges
     a realized participant (``n_steps * subsampled_rho(rho_step, q)``,
-    via the shared :func:`repro.core.privacy.per_step_charges`)."""
+    via the shared :func:`repro.core.privacy.per_step_charges`). Public:
+    the population drivers (``repro.population.runtime``) charge the
+    per-virtual-client ledger with exactly this vector."""
     return spec.tau * per_step_charges(_rho_steps(spec), spec.accounting_q())
 
 
@@ -210,7 +212,7 @@ def rounds_within_budgets(spec: FederationSpec, state: FLState,
     projection, so a chunk sized by this bound never contains a round the
     per-round driver would have refused (it may end early; the training
     loop re-probes on the realized ledger and continues)."""
-    charges = _round_rho_charges(spec)
+    charges = round_rho_charges(spec)
     rho = state.rho
     spent = state.resource_spent
     cost = spec.round_cost()
@@ -255,7 +257,7 @@ def run_round(spec: FederationSpec, state: FLState, batch: Any,
             _raise_budget(which, spec)
     key, sub = jax.random.split(state.key)
     sig = sigmas_for(spec)
-    per_round = _round_rho_charges(spec)
+    per_round = round_rho_charges(spec)
     residual = state.residual
     if spec.has_pipeline():
         # pipeline round: sample this round's participant set from the
@@ -444,6 +446,133 @@ def eval_params(spec: FederationSpec, state: FLState) -> Any:
     return collapse_clients(state.params, spec.topology)
 
 
+def budget_train_loop(*, state, max_rounds: int, eval_fn: Callable | None,
+                      eval_every: int, history: list[dict],
+                      chunk_rounds: int,
+                      rounds_done: Callable[[Any], int],
+                      exceeds: Callable[[Any], bool],
+                      safe_rounds: Callable[[Any, int], int],
+                      run_single: Callable[[Any], tuple],
+                      build_chunk: Callable[[int, int], Any],
+                      run_chunk: Callable[..., tuple],
+                      run_tail: Callable[[Any, Any, int], tuple],
+                      eval_model: Callable[[Any], Any]) -> tuple[Any, dict]:
+    """THE budget-aware driver loop, shared by the dense :func:`train` and
+    the cohort-execution ``repro.population.train_population`` (one copy of
+    the double-buffered prefetch / tail-chunk / eval-boundary invariants;
+    the two drivers differ only in how a round runs and how budgets probe).
+    Parameterized over an opaque ``state`` and an opaque prepared ``chunk``:
+
+        rounds_done(state) -> int          completed-round counter
+        exceeds(state) -> bool             would one more round overrun?
+        safe_rounds(state, cap) -> int     certain-to-fit round count
+        run_single(state) -> (state, rec)  one round, building its own batch
+        build_chunk(start, n) -> chunk     host-build + device_put n rounds
+                                           starting at round index ``start``
+        run_chunk(state, chunk, n, prefetch) -> (state, recs)
+                                           fused scan; may raise
+                                           PrefetchFailed carrying the
+                                           completed state/records
+        run_tail(state, chunk, r) -> (state, rec)
+                                           row r of chunk via the per-round
+                                           path
+        eval_model(state) -> params        the eval_fn operand
+
+    Tracks theta* = argmin of the evaluated loss (the paper uses the best
+    model among K iterations); appends materialized records to ``history``;
+    returns (state, best).
+    """
+    best = {"loss": float("inf"), "round": 0}
+
+    def track_best(rec: dict, evaluated: bool):
+        nonlocal best
+        # theta* tracking: compare on eval loss when available, else train
+        if eval_fn is None:
+            crit = rec["loss"]
+        elif evaluated:
+            crit = rec["eval_loss"]
+        else:
+            crit = float("inf")
+        if crit < best["loss"]:
+            # rec AFTER the overrides: best["loss"] must stay the tracked
+            # criterion (eval loss when eval_fn is given), not rec's train
+            # loss, or a later genuinely-better eval never displaces it
+            best = {**rec, "loss": crit, "round": rec["round"]}
+
+    if chunk_rounds <= 1:
+        while rounds_done(state) < max_rounds:
+            if exceeds(state):
+                break
+            state, rec = run_single(state)
+            rec = materialize_record(rec)
+            history.append(rec)
+            evaluated = False
+            if eval_fn is not None and rounds_done(state) % eval_every == 0:
+                rec.update(eval_fn(eval_model(state)))
+                evaluated = True
+            track_best(rec, evaluated)
+        return state, best
+
+    pending = None            # double buffer: (chunk, n) prefetched
+    while rounds_done(state) < max_rounds:
+        cap = min(2 * chunk_rounds, max_rounds - rounds_done(state))
+        safe = safe_rounds(state, cap)
+        if pending is not None:
+            # prefetched chunks were sized by the post-chunk projection,
+            # so they always fit (safe >= n); run them whole to keep the
+            # sampler stream aligned with the per-round driver
+            chunk, n = pending
+            pending = None
+        elif safe == 0:
+            break
+        else:
+            n = min(chunk_rounds, safe)
+            chunk = build_chunk(rounds_done(state), n)
+        next_n = min(chunk_rounds, safe - n,
+                     max_rounds - rounds_done(state) - n)
+        next_start = rounds_done(state) + n
+
+        def build_next(next_n=next_n, next_start=next_start):
+            nonlocal pending
+            if next_n > 0:
+                pending = (build_chunk(next_start, next_n), next_n)
+
+        deferred = None
+        if n < chunk_rounds:
+            # tail chunk (budget/max_rounds edge): drive the rows through
+            # the per-round path — the single compiled round is reused for
+            # any tail size, instead of paying a one-shot XLA compile of a
+            # fresh n-round scan for a few rounds
+            recs = []
+            for r in range(n):
+                state, rec = run_tail(state, chunk, r)
+                recs.append(rec)
+        else:
+            try:
+                state, recs = run_chunk(state, chunk, n, build_next)
+            except PrefetchFailed as pf:
+                # the sampler failed building the NEXT chunk; keep the
+                # completed chunk's state/records, re-raise the original
+                # error after recording them (the per-round driver raises
+                # at the same point: after round r, before batch r+1)
+                state, recs, deferred = pf.state, pf.records, pf.__cause__
+        recs = [materialize_record(r) for r in recs]
+        history.extend(recs)
+        evaluated = False
+        if eval_fn is not None and (
+                rounds_done(state) // eval_every
+                > (rounds_done(state) - n) // eval_every):
+            # an eval was due mid-chunk: run it once, at the boundary
+            recs[-1].update(eval_fn(eval_model(state)))
+            evaluated = True
+        for rec in recs[:-1]:
+            track_best(rec, False)
+        track_best(recs[-1], evaluated)
+        if deferred is not None:
+            raise deferred
+    return state, best
+
+
 def train(spec: FederationSpec, state: FLState, sampler: Callable,
           max_rounds: int = 10_000, eval_fn: Callable | None = None,
           eval_every: int = 1, rng=None,
@@ -471,99 +600,22 @@ def train(spec: FederationSpec, state: FLState, sampler: Callable,
     if rng is None:
         rng = np.random.default_rng(spec.seed)
     history = [] if history is None else history
-    best = {"loss": float("inf"), "round": 0}
-
-    def track_best(rec: dict, evaluated: bool):
-        nonlocal best
-        # theta* tracking: compare on eval loss when available, else train
-        if eval_fn is None:
-            crit = rec["loss"]
-        elif evaluated:
-            crit = rec["eval_loss"]
-        else:
-            crit = float("inf")
-        if crit < best["loss"]:
-            # rec AFTER the overrides: best["loss"] must stay the tracked
-            # criterion (eval loss when eval_fn is given), not rec's train
-            # loss, or a later genuinely-better eval never displaces it
-            best = {**rec, "loss": crit, "round": rec["round"]}
-
-    if chunk_rounds <= 1:
-        while state.rounds_done < max_rounds:
-            if exceeds_budgets(spec, state):
-                break
-            batch = round_batch(spec, sampler, rng)
-            state, rec = run_round(spec, state, batch, check_budgets=False)
-            rec = materialize_record(rec)
-            history.append(rec)
-            evaluated = False
-            if eval_fn is not None and state.rounds_done % eval_every == 0:
-                rec.update(eval_fn(eval_params(spec, state)))
-                evaluated = True
-            track_best(rec, evaluated)
-    else:
-        pending = None        # double buffer: (device batches, n) prefetched
-        while state.rounds_done < max_rounds:
-            cap = min(2 * chunk_rounds, max_rounds - state.rounds_done)
-            safe, _ = rounds_within_budgets(spec, state, cap)
-            if pending is not None:
-                # prefetched chunks were sized by the post-chunk projection,
-                # so they always fit (safe >= n); run them whole to keep the
-                # sampler stream aligned with the per-round driver
-                batches, n = pending
-                pending = None
-            elif safe == 0:
-                break
-            else:
-                n = min(chunk_rounds, safe)
-                batches = jax.device_put(round_batches(spec, sampler, rng, n))
-            next_n = min(chunk_rounds, safe - n,
-                         max_rounds - state.rounds_done - n)
-
-            def build_next(next_n=next_n):
-                nonlocal pending
-                if next_n > 0:
-                    pending = (jax.device_put(
-                        round_batches(spec, sampler, rng, next_n)), next_n)
-
-            deferred = None
-            if n < chunk_rounds:
-                # tail chunk (budget/max_rounds edge): drive the rows
-                # through the per-round path — the single compiled round is
-                # reused for any tail size, instead of paying a one-shot
-                # XLA compile of a fresh n-round scan for a few rounds
-                recs = []
-                for r in range(n):
-                    row = jax.tree.map(lambda x, r=r: x[r], batches)
-                    state, rec = run_round(spec, state, row,
-                                           check_budgets=False)
-                    recs.append(rec)
-            else:
-                try:
-                    state, recs = run_rounds(spec, state, batches, n,
-                                             check_budgets=False,
-                                             prefetch=build_next)
-                except PrefetchFailed as pf:
-                    # the sampler failed building the NEXT chunk; keep the
-                    # completed chunk's state/records, re-raise the original
-                    # error after recording them (the per-round driver
-                    # raises at the same point: after round r, before
-                    # batch r+1)
-                    state, recs, deferred = pf.state, pf.records, pf.__cause__
-            recs = [materialize_record(r) for r in recs]
-            history.extend(recs)
-            evaluated = False
-            if eval_fn is not None and (
-                    state.rounds_done // eval_every
-                    > (state.rounds_done - n) // eval_every):
-                # an eval was due mid-chunk: run it once, at the boundary
-                recs[-1].update(eval_fn(eval_params(spec, state)))
-                evaluated = True
-            for rec in recs[:-1]:
-                track_best(rec, False)
-            track_best(recs[-1], evaluated)
-            if deferred is not None:
-                raise deferred
+    state, best = budget_train_loop(
+        state=state, max_rounds=max_rounds, eval_fn=eval_fn,
+        eval_every=eval_every, history=history, chunk_rounds=chunk_rounds,
+        rounds_done=lambda s: s.rounds_done,
+        exceeds=lambda s: exceeds_budgets(spec, s) is not None,
+        safe_rounds=lambda s, cap: rounds_within_budgets(spec, s, cap)[0],
+        run_single=lambda s: run_round(
+            spec, s, round_batch(spec, sampler, rng), check_budgets=False),
+        build_chunk=lambda start, n: jax.device_put(
+            round_batches(spec, sampler, rng, n)),
+        run_chunk=lambda s, chunk, n, prefetch: run_rounds(
+            spec, s, chunk, n, check_budgets=False, prefetch=prefetch),
+        run_tail=lambda s, chunk, r: run_round(
+            spec, s, jax.tree.map(lambda x: x[r], chunk),
+            check_budgets=False),
+        eval_model=lambda s: eval_params(spec, s))
     return state, {
         "best": best, "rounds": state.rounds_done,
         "resource_spent": state.resource_spent,

@@ -71,6 +71,33 @@ def subsampled_rho(rho_step: float, q: float) -> float:
     return q * rho_step
 
 
+def composed_subsampling_q(*qs: float) -> float:
+    """Compose independent subsampling stages into one realized-step rate.
+
+    Cohort execution stacks two Bernoulli gates in front of every local
+    step: the client is drawn into the round's cohort (rate K/M over the
+    population) and then participates within the cohort (the
+    ``participation`` rate q of the aggregation pipeline). The stages are
+    independent draws, so the probability a given client realizes a given
+    round's steps is the product — and that product is the q of
+    :func:`subsampled_rho` under the expectation-level amplification
+    (``FederationSpec(amplify_participation=True)``). Every caveat of
+    ``subsampled_rho`` transports unchanged: the bound is marginal over
+    BOTH draws, assumes uniform sampling (availability-skewed cohorts
+    break it — see ``repro.population.samplers.HeterogeneousCohort``), and
+    the sound conditional default (q = 1, charge realized steps only) is
+    unaffected because the per-client ledger already charges each virtual
+    client exactly the rounds it ran.
+    """
+    q = 1.0
+    for qi in qs:
+        if not 0.0 < qi <= 1.0:
+            raise ValueError(f"subsampling rates must be in (0, 1], "
+                             f"got {qi}")
+        q *= qi
+    return q
+
+
 def per_step_charges(rho_steps, q: float):
     """Vectorized :func:`subsampled_rho` over a (C,) per-step rho vector —
     THE per-realized-local-step charge expression of every ledger surface

@@ -50,21 +50,22 @@ class FederatedData:
 
         ``proportional=True`` returns the paper's per-client X_m: sizes
         proportional to each client's ``n_train`` with the same *total*
-        batch budget (mean ~= batch_size, floor 1), so big clients batch
-        big and the privacy accountant sees their true 2G/X_m sensitivity.
-        Note the engines still *sample* a uniform ``batch_size`` per step
-        (round batches stack to one (C, tau, B, ...) block); a caller
-        pairing this with ``make_sampler(batch_size)`` must cap the
-        accounted X_m at ``batch_size`` (as ``benchmarks.common.
-        run_dp_pasgd`` does) — an X_m above the executed batch would claim
-        a smaller sensitivity than the mechanism actually has, while below
-        it the accounting is merely conservative.
+        batch budget (target mean ``batch_size``, floor 1), CAPPED at
+        ``batch_size``. The cap is a soundness invariant enforced here,
+        not caller etiquette: the engines *sample* a uniform ``batch_size``
+        per step (round batches stack to one (C, tau, B, ...) block via
+        ``make_sampler(batch_size)``), so an accounted X_m above the
+        executed batch would claim a smaller per-step sensitivity (2G/X_m,
+        paper §5.2) than the mechanism actually has — a privacy accounting
+        hole. Below the executed batch the accounting is merely
+        conservative (small clients pay extra noise), which is the safe
+        side the cap leaves data-rich clients on.
         """
         if not proportional:
             return [batch_size for _ in self.clients]
         total = sum(c.n_train for c in self.clients)
         budget = batch_size * len(self.clients)
-        return [max(1, round(budget * c.n_train / total))
+        return [max(1, min(batch_size, round(budget * c.n_train / total)))
                 for c in self.clients]
 
     def make_sampler(self, batch_size: int):

@@ -33,11 +33,13 @@ class FederatedTokenStream:
         self.prefix_len = prefix_len
         self.d_model = d_model
         root = np.random.default_rng(cfg.seed)
-        self.client_topics = [
-            root.integers(0, max(1, cfg.vocab - cfg.topic_width),
-                          size=cfg.topics_per_client)
-            for _ in range(cfg.n_clients)
-        ]
+        # one (n_clients, topics) block, not a per-client list: at virtual-
+        # population scale (n_clients = M up to 10^6, repro.population) the
+        # topic table is the stream's only O(M) state and must stay a few
+        # MB of one array rather than a million tiny ones
+        self.client_topics = root.integers(
+            0, max(1, cfg.vocab - cfg.topic_width),
+            size=(cfg.n_clients, cfg.topics_per_client))
 
     def _sample_tokens(self, client: int, n: int,
                        rng: np.random.Generator) -> np.ndarray:

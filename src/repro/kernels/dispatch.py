@@ -161,7 +161,15 @@ def resolve_backend(name: str, backend: str = "auto") -> str:
 
     Resolution order: an explicit non-auto argument wins untouched (callers
     get the real error if they force a broken backend); else the
-    ``KERNEL_BACKEND`` env var if set; else the best probed backend.
+    ``KERNEL_BACKEND`` env var if set; else the best probed backend for
+    this process's default jax backend. "Best" is platform-aware: on TPU,
+    ``pallas > interpret > ref``; everywhere else ``interpret`` is ranked
+    BELOW the jnp oracle — ``pallas_call(interpret=True)`` executes the
+    kernel body element-block by element-block as jax ops, ~100x slower
+    than the fused oracle on CPU (measured in benchmarks/throughput.py).
+    Interpret mode is a correctness rehearsal, not a fast path; it stays
+    reachable explicitly (``backend="interpret"`` /
+    ``KERNEL_BACKEND=interpret``) and via the parity suites.
     """
     if backend not in KERNEL_BACKENDS:
         raise ValueError(f"backend must be one of {KERNEL_BACKENDS}, "
@@ -174,7 +182,9 @@ def resolve_backend(name: str, backend: str = "auto") -> str:
             raise ValueError(f"${KERNEL_BACKEND_ENV}={env!r} is not one of "
                              f"{KERNEL_BACKENDS}")
         return env
-    for candidate in ("pallas", "interpret"):
+    candidates = (("pallas", "interpret") if jax.default_backend() == "tpu"
+                  else ("pallas",))       # off-TPU: ref outranks interpret
+    for candidate in candidates:
         if backend_works(name, candidate):
             return candidate
     return "ref"

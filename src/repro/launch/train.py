@@ -11,6 +11,15 @@ is selected declaratively via ``FederationSpec.engine``.
 
 ``--chunk-rounds R`` fuses R rounds per XLA dispatch (the run_rounds scan
 driver — same math, bit-identical ledger, a fraction of the host overhead).
+
+``--population M --cohort-size K`` switches to cohort execution over M
+virtual clients (repro.population): each round trains a sampled cohort of
+K devices, device memory is bounded by K independent of M, and the
+per-virtual-client privacy ledger / error-feedback residuals live in the
+host-side ClientStore. M = 10^5..10^6 runs on a laptop:
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma3-4b --smoke \
+        --rounds 10 --population 100000 --cohort-size 8 --tau 5 --eps 10
 """
 from __future__ import annotations
 
@@ -23,6 +32,13 @@ import numpy as np
 
 from repro.api import FederationSpec, init_state, save_state, train
 from repro.configs import get_arch, smoke_variant
+from repro.population import (
+    HeterogeneousCohort,
+    init_population_state,
+    population_from_sampler,
+    save_population_state,
+    train_population,
+)
 from repro.core.convergence import ProblemConstants
 from repro.core.design import DesignProblem, ResourceModel
 from repro.core.fl import design_sigmas
@@ -37,16 +53,23 @@ def build_federation(cfg, n_clients: int, tau: int, batch_size: int,
                      engine: str = "auto", seed: int = 0,
                      participation: float = 1.0, compressor: str = "none",
                      compression_ratio: float = 0.1,
-                     compression_bits: int = 8):
+                     compression_bits: int = 8, population: int = 0):
     """Assemble the repro.api handles for a transformer federation.
 
     Returns ``(model, spec, state, sampler)`` — drive them with
     ``repro.api.train(spec, state, sampler, ...)``. The aggregation-pipeline
     knobs (participation / compressor) pass through to the spec.
+
+    ``population=M > 0`` switches to cohort execution
+    (:mod:`repro.population`): ``n_clients`` becomes the per-round cohort
+    size K, the token stream spans all M virtual clients (lazy — only the
+    sampled cohort's batches are ever synthesized), and the returned
+    ``state`` is a :class:`repro.population.PopulationState` to drive with
+    ``train_population`` (wrap the sampler via ``population_from_sampler``).
     """
     model = Transformer(cfg)
     task = TokenTaskConfig(vocab=cfg.vocab, seq_len=seq_len,
-                           n_clients=n_clients, seed=seed)
+                           n_clients=population or n_clients, seed=seed)
     stream = FederatedTokenStream(task, batch_size,
                                   prefix_len=cfg.prefix_len,
                                   d_model=cfg.d_model)
@@ -58,9 +81,14 @@ def build_federation(cfg, n_clients: int, tau: int, batch_size: int,
         participation=participation, compressor=compressor,
         compression_ratio=compression_ratio,
         compression_bits=compression_bits,
+        population=population or None,
+        cohort_size=n_clients if population else None,
         sigmas=tuple(float(s) for s in np.asarray(sigmas)),
         batch_sizes=(batch_size,) * n_clients, delta=delta, seed=seed)
-    state = init_state(spec, params0)
+    if population:
+        state = init_population_state(spec, params0)
+    else:
+        state = init_state(spec, params0)
     return model, spec, state, stream.sampler
 
 
@@ -72,6 +100,7 @@ def federation_meta(spec) -> dict:
             "compression_ratio": spec.compression_ratio,
             "compression_bits": spec.compression_bits,
             "participation": spec.participants_per_round(),
+            "population": spec.population,
             "topology": spec.topology}
 
 
@@ -101,6 +130,20 @@ def main(argv=None):
                          "loop device-resident with <=1 host sync and a "
                          "prefetched batch pipeline per chunk; eval then "
                          "happens at chunk boundaries only")
+    ap.add_argument("--population", type=int, default=0,
+                    help="train over M virtual clients with cohort "
+                         "execution (repro.population): only --cohort-size "
+                         "devices are resident per round, device memory is "
+                         "independent of M; 0 = dense resident clients")
+    ap.add_argument("--cohort-size", type=int, default=0,
+                    help="per-round cohort size K (population mode; "
+                         "default: --clients)")
+    ap.add_argument("--cohort-hetero", action="store_true",
+                    help="sample cohorts under the Beta-availability + "
+                         "dropout heterogeneity model instead of uniform "
+                         "K-of-M")
+    ap.add_argument("--cohort-dropout", type=float, default=0.05,
+                    help="mid-round dropout rate of the heterogeneity model")
     ap.add_argument("--participation", type=float, default=1.0,
                     help="fraction of clients sampled per round")
     ap.add_argument("--compressor", default="none",
@@ -114,17 +157,23 @@ def main(argv=None):
     if args.smoke:
         cfg = smoke_variant(cfg)
 
+    # in population mode the resident block is the cohort, not --clients
+    n_resident = (args.cohort_size or args.clients if args.population
+                  else args.clients)
+    if args.population and not 0 < n_resident <= args.population:
+        raise SystemExit(f"--cohort-size must be in [1, {args.population}]")
+
     if args.tau:
         tau, k = args.tau, args.rounds * args.tau
-        sigmas = design_sigmas(k, args.clip, [args.batch] * args.clients,
+        sigmas = design_sigmas(k, args.clip, [args.batch] * n_resident,
                                args.eps, args.delta)
     else:
         # paper §7: solve for (K, tau, sigma) under the budgets
         consts = ProblemConstants(eta=args.lr, lam=0.5, lip=2.0, alpha=5.0,
-                                  xi2=1.0, dim=1000, n_clients=args.clients)
+                                  xi2=1.0, dim=1000, n_clients=n_resident)
         prob = DesignProblem(
             consts=consts, resource=ResourceModel(args.c1, args.c2),
-            clip_norm=args.clip, batch_sizes=[args.batch] * args.clients,
+            clip_norm=args.clip, batch_sizes=[args.batch] * n_resident,
             delta=args.delta, eps_th=args.eps, c_th=args.cth)
         sol = prob.solve()
         tau = sol.tau
@@ -133,29 +182,53 @@ def main(argv=None):
               f"bound={sol.predicted_bound:.4f} cost={sol.cost:.0f}")
 
     model, spec, state, sampler = build_federation(
-        cfg, args.clients, tau, args.batch, args.seq, sigmas, lr=args.lr,
+        cfg, n_resident, tau, args.batch, args.seq, sigmas, lr=args.lr,
         clip_norm=args.clip, delta=args.delta, engine=args.engine,
         participation=args.participation, compressor=args.compressor,
         compression_ratio=args.compress_ratio,
-        compression_bits=args.compress_bits)
+        compression_bits=args.compress_bits, population=args.population)
     spec = spec.replace(eps_th=args.eps, c_th=args.cth,
                         c1=args.c1, c2=args.c2)
     t0 = time.time()
-    state, out = train(spec, state, sampler, max_rounds=args.rounds,
-                       chunk_rounds=args.chunk_rounds)
+    if args.population:
+        pop = population_from_sampler(args.population, sampler,
+                                      name="federated-tokens")
+        cohort_sampler = (HeterogeneousCohort(seed=spec.seed,
+                                              dropout=args.cohort_dropout)
+                          if args.cohort_hetero else None)
+        state, out = train_population(spec, state, pop,
+                                      cohort_sampler=cohort_sampler,
+                                      max_rounds=args.rounds,
+                                      chunk_rounds=args.chunk_rounds)
+    else:
+        state, out = train(spec, state, sampler, max_rounds=args.rounds,
+                           chunk_rounds=args.chunk_rounds)
     dt = time.time() - t0
-    print(json.dumps({
+    summary = {
         "arch": cfg.name, "rounds": out["rounds"],
         "chunk_rounds": args.chunk_rounds,
         "final_loss": out["history"][-1]["loss"] if out["history"] else None,
         "max_epsilon": out["max_epsilon"],
         "resource_spent": out["resource_spent"],
         "wall_s": round(dt, 1),
-    }, indent=2))
+    }
+    if args.population:
+        summary.update({
+            "population": args.population, "cohort_size": n_resident,
+            # sampled != realized under --participation < 1: the cohort
+            # counter ticks for every sampled client, the rho ledger only
+            # for clients that actually ran (and spent privacy)
+            "distinct_sampled":
+                int((state.store.rounds_participated > 0).sum()),
+            "distinct_participants": int((state.store.rho > 0).sum()),
+        })
+    print(json.dumps(summary, indent=2))
     if args.save:
-        save_state(args.save, state,
-                   extra={"history": out["history"],
-                          **federation_meta(spec)})
+        extra = {"history": out["history"], **federation_meta(spec)}
+        if args.population:
+            save_population_state(args.save, state, extra=extra)
+        else:
+            save_state(args.save, state, extra=extra)
         print(f"saved federation state to {args.save}")
     return 0
 

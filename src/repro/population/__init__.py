@@ -1,0 +1,64 @@
+"""``repro.population`` — virtual client populations with cohort execution.
+
+Scale DP-PASGD from tens of resident clients to millions of virtual IoT
+devices: a :class:`ClientPopulation` names M clients behind a lazy
+per-client sampler, a cohort sampler draws K << M of them per round, and
+the drivers here gather ONLY the sampled cohort onto the device — device
+memory is bounded by K, independent of M. Sticky per-client state
+(error-feedback residuals, the per-client privacy ledger) lives in the
+host-side :class:`ClientStore`, sparse-updated by cohort and checkpointed
+with the model.
+
+    from repro.population import (
+        init_population_state, synthetic_population, train_population)
+
+    spec = FederationSpec(n_clients=K, tau=8, loss_fn=loss,
+                          optimizer=sgd(0.3), population=M, cohort_size=K,
+                          sigmas=(sigma,) * K, batch_sizes=(B,) * K)
+    pop = synthetic_population(M, dim=20, batch_size=B, alpha=0.3)
+    pstate = init_population_state(spec, params0)
+    pstate, out = train_population(spec, pstate, pop, chunk_rounds=8)
+
+With M == C and cohort == population this path is bit-for-bit the dense
+``repro.api`` participation path (the identity gate of
+tests/test_population.py).
+"""
+from repro.population.population import (
+    ClientPopulation,
+    population_from_federated,
+    population_from_sampler,
+    synthetic_population,
+)
+from repro.population.runtime import (
+    PopulationState,
+    cohort_batch,
+    cohort_batches,
+    device_block_bytes,
+    exceeds_population_budgets,
+    init_population_state,
+    load_population_state,
+    peek_population_epsilon,
+    rounds_within_population_budgets,
+    run_cohort_round,
+    run_cohort_rounds,
+    save_population_state,
+    train_population,
+)
+from repro.population.samplers import (
+    CohortSampler,
+    HeterogeneousCohort,
+    UniformCohort,
+)
+from repro.population.store import ClientStore
+
+__all__ = [
+    "ClientPopulation", "population_from_federated", "population_from_sampler",
+    "synthetic_population",
+    "PopulationState", "cohort_batch", "cohort_batches", "device_block_bytes",
+    "exceeds_population_budgets", "init_population_state",
+    "load_population_state", "peek_population_epsilon",
+    "rounds_within_population_budgets", "run_cohort_round",
+    "run_cohort_rounds", "save_population_state", "train_population",
+    "CohortSampler", "HeterogeneousCohort", "UniformCohort",
+    "ClientStore",
+]

@@ -1,0 +1,485 @@
+"""Cohort execution: drive the DP-PASGD engines over a virtual population.
+
+The device never sees the population. Each round the driver
+
+1. draws a **cohort** of K = ``spec.n_clients`` virtual ids from the M =
+   ``spec.population`` clients (:mod:`repro.population.samplers`,
+   deterministic per round index),
+2. **gathers** the cohort onto the device block: the K per-client data
+   shards are materialized lazily from the :class:`ClientPopulation`, and
+   the cohort's sticky state (error-feedback residual rows, per-vid rho)
+   comes out of the :class:`ClientStore`,
+3. runs the *existing* compiled round — ``repro.api.run_round`` /
+   ``run_rounds`` over the K-block, unchanged; ``spec.population`` is not
+   part of ``engine_key()``, so sweeping M reuses one XLA program and
+   device memory is bounded by K, independent of M —
+4. **scatters** the cohort's updated residual rows and rho charges back
+   into the store.
+
+Identity gate: with M == C and cohort == population the gather/scatter are
+the identity (the uniform sampler returns sorted vids, so the full cohort
+is ``arange(M)``), the data RNG stream is consumed in the same order, and
+the very same cached round function runs — the cohort path is bit-for-bit
+the dense ``participation`` path (pinned in tests/test_population.py).
+
+Fused driver: :func:`run_cohort_rounds` chunks R rounds through
+``repro.api.run_rounds`` with ONE cohort per chunk — cohorts resample at
+chunk boundaries (per-round cohorts inside the scan are a staged follow-up;
+the within-chunk ``participation`` mask still varies per round). The
+per-round and chunked drivers therefore realize *different cohort
+schedules* for chunk_rounds > 1 (both deterministic); with cohort ==
+population they coincide and the dense chunk/loop identity carries over.
+
+All value semantics are linear, as in ``repro.api.state``: a successful
+round CONSUMES the input state's device buffers (donation) — continue from
+the returned :class:`PopulationState`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import os
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.api.spec import FederationSpec
+from repro.api.state import (
+    FLState,
+    PrefetchFailed,
+    _raise_budget,
+    budget_train_loop,
+    eval_params,
+    init_state,
+    load_state,
+    round_rho_charges,
+    run_round,
+    run_rounds,
+    save_state,
+)
+from repro.core.aggregation import tree_dim
+from repro.core.privacy import rho_budget, zcdp_to_dp
+from repro.population.population import ClientPopulation
+from repro.population.samplers import CohortSampler, UniformCohort
+from repro.population.store import STORE_FILENAME, ClientStore
+
+
+@dataclass(frozen=True)
+class PopulationState:
+    """Training state of a cohort-executed federation: the device-resident
+    K-block :class:`FLState` plus the host-resident per-virtual-client
+    :class:`ClientStore`. ``fl.rho`` holds the *current cohort's* ledger
+    view (gathered/scattered each round); the store is authoritative."""
+    fl: FLState
+    store: ClientStore
+
+    def replace(self, **changes) -> "PopulationState":
+        return dataclasses.replace(self, **changes)
+
+
+def init_population_state(spec: FederationSpec, params0: Any,
+                          key: jax.Array | None = None) -> PopulationState:
+    """Fresh population state: a K-block FLState + an empty ClientStore."""
+    if not spec.is_population():
+        raise ValueError("init_population_state needs a population spec "
+                         "(FederationSpec(population=M, cohort_size=K))")
+    fl = init_state(spec, params0, key)
+    pipe = spec.aggregation_pipeline()
+    dim = (tree_dim(params0)
+           if pipe is not None and pipe.needs_residual() else None)
+    return PopulationState(fl=fl,
+                           store=ClientStore(spec.population,
+                                             residual_dim=dim))
+
+
+# ---------------------------------------------------------------------------
+# cohort data plumbing
+# ---------------------------------------------------------------------------
+
+def cohort_batch(spec: FederationSpec, population: ClientPopulation,
+                 cohort: np.ndarray, rng) -> Any:
+    """Stack the cohort's lazily-materialized shards into the (K, tau, B,
+    ...) round batch — ``repro.api.round_batch`` with vids instead of a
+    dense client range (identical stream order when cohort == arange)."""
+    per_client = [population.sampler(int(v), spec.tau, rng) for v in cohort]
+    return jax.tree.map(lambda *xs: np.stack(xs), *per_client)
+
+
+def cohort_batches(spec: FederationSpec, population: ClientPopulation,
+                   cohort: np.ndarray, rng, n_rounds: int) -> Any:
+    """``n_rounds`` stacked cohort batches, leaves (R, K, tau, B, ...) —
+    the chunk operand of :func:`run_cohort_rounds` (one fixed cohort per
+    chunk), drawn from ``rng`` in per-round order like
+    ``repro.api.round_batches``."""
+    rounds = [cohort_batch(spec, population, cohort, rng)
+              for _ in range(n_rounds)]
+    return jax.tree.map(lambda *xs: np.stack(xs), *rounds)
+
+
+def _resolve_cohort_sampler(spec: FederationSpec,
+                            cohort_sampler: CohortSampler | None,
+                            ) -> CohortSampler:
+    """Default the sampler, and refuse the one silently-unsound knob
+    combination: ``amplify_participation=True`` charges q_eff = (K/M) *
+    participation per realized step, a bound stated for UNIFORM cohorts —
+    under an availability-skewed sampler a high-rate device realizes far
+    more than K/M of the rounds and the reported epsilon would understate
+    its true loss. Samplers that honestly draw uniform K-of-M declare
+    ``uniform_over_population = True`` (as :class:`UniformCohort` does);
+    everything else must use the sound conditional default ledger."""
+    sampler = cohort_sampler or UniformCohort(spec.seed)
+    if spec.amplify_participation and not getattr(
+            sampler, "uniform_over_population", False):
+        raise ValueError(
+            "amplify_participation=True needs a uniform K-of-M cohort "
+            f"sampler; {type(sampler).__name__} does not declare "
+            "uniform_over_population, so the K/M amplification bound does "
+            "not hold for its skewed cohorts — drop "
+            "amplify_participation (the conditional per-realized-client "
+            "ledger stays exact) or use UniformCohort")
+    return sampler
+
+
+def _check_cohort(spec: FederationSpec, population: ClientPopulation,
+                  cohort: np.ndarray) -> np.ndarray:
+    if not spec.is_population():
+        raise ValueError("cohort drivers need a population spec "
+                         "(FederationSpec(population=M, cohort_size=K)); "
+                         "use repro.api.run_round for dense federations")
+    cohort = np.asarray(cohort)
+    if cohort.shape != (spec.n_clients,):
+        raise ValueError(f"cohort has shape {cohort.shape}, expected "
+                         f"({spec.n_clients},) (= spec cohort_size)")
+    if population.n_clients != spec.population:
+        raise ValueError(f"population object has {population.n_clients} "
+                         f"clients, spec.population={spec.population}")
+    if np.unique(cohort).size != cohort.size:
+        raise ValueError("cohort vids must be unique")
+    if cohort.min() < 0 or cohort.max() >= spec.population:
+        raise ValueError(f"cohort vids out of range [0, {spec.population})")
+    return cohort
+
+
+def _gathered_fl(spec: FederationSpec, pstate: PopulationState,
+                 cohort: np.ndarray) -> FLState:
+    """The K-block FLState with the cohort's sticky state gathered in."""
+    fl = pstate.fl
+    changes: dict = {"rho": pstate.store.gather_rho(cohort)}
+    if pstate.store.needs_residual():
+        changes["residual"] = jax.numpy.asarray(
+            pstate.store.gather_residual(cohort))
+    return fl.replace(**changes)
+
+
+def device_block_bytes(pstate: PopulationState, batch: Any = None) -> int:
+    """Bytes of the device-resident cohort block (params, opt_state,
+    residual, plus an optional batch operand) — the quantity the
+    cohort-scaling benchmark pins as independent of M."""
+    trees = [pstate.fl.params, pstate.fl.opt_state]
+    if pstate.fl.residual is not None:
+        trees.append(pstate.fl.residual)
+    if batch is not None:
+        trees.append(batch)
+    return int(sum(np.dtype(x.dtype).itemsize * int(np.prod(x.shape))
+                   for t in trees for x in jax.tree.leaves(t)))
+
+
+# ---------------------------------------------------------------------------
+# budget probes (population-wide: worst rho over the store, not the cohort)
+# ---------------------------------------------------------------------------
+
+def _max_round_charge(spec: FederationSpec) -> float:
+    """Worst-case per-round rho increment of any virtual client (population
+    slots are homogeneous by spec validation, but take the max anyway)."""
+    return float(np.max(round_rho_charges(spec)))
+
+
+def peek_population_epsilon(spec: FederationSpec, pstate: PopulationState,
+                            extra_rounds: int = 0) -> float:
+    """Worst-client eps over the POPULATION if the worst client were
+    sampled into the next ``extra_rounds`` cohorts — the population analog
+    of ``repro.api.peek_epsilon_fast`` (same conservative stance: the probe
+    assumes the worst client participates)."""
+    worst = pstate.store.max_rho() + extra_rounds * _max_round_charge(spec)
+    return zcdp_to_dp(worst, spec.delta)
+
+
+def exceeds_population_budgets(spec: FederationSpec,
+                               pstate: PopulationState) -> str | None:
+    """Would one more cohort round break a budget? "resource" / "privacy"
+    / None, mirroring ``repro.api.exceeds_budgets``."""
+    if pstate.fl.resource_spent + spec.round_cost() > spec.c_th:
+        return "resource"
+    if peek_population_epsilon(spec, pstate, 1) > spec.eps_th:
+        return "privacy"
+    return None
+
+
+def rounds_within_population_budgets(spec: FederationSpec,
+                                     pstate: PopulationState,
+                                     limit: int) -> tuple[int, str | None]:
+    """How many future cohort rounds CERTAINLY fit the budgets (capped at
+    ``limit``), plus the next-binding budget. Worst-case projection: the
+    same (worst) client is assumed sampled and charged every round, so a
+    chunk sized by this bound never contains a round the per-round driver
+    would have refused — exact when cohort == population with full
+    participation, conservative otherwise (the caller re-probes on the
+    realized ledger, as the dense ``rounds_within_budgets`` contract)."""
+    charge = _max_round_charge(spec)
+    cost = spec.round_cost()
+    worst = pstate.store.max_rho()
+    spent = pstate.fl.resource_spent
+    n = 0
+    while n < limit:
+        if spent + cost > spec.c_th:
+            return n, "resource"
+        if zcdp_to_dp(worst + charge, spec.delta) > spec.eps_th:
+            return n, "privacy"
+        worst += charge
+        spent += cost
+        n += 1
+    return n, None
+
+
+# ---------------------------------------------------------------------------
+# round drivers
+# ---------------------------------------------------------------------------
+
+def _population_epsilon_fix(rec: dict, outside_max: float,
+                            delta: float) -> None:
+    """Lift a cohort-local ``max_epsilon`` record to the population max.
+
+    The inner driver computed eps over the cohort's rho only; clients
+    outside the cohort are static during the round(s), so the population
+    worst is max(outside_max, cohort_worst). ``rho_budget`` is the exact
+    inverse of ``zcdp_to_dp`` (rho = (sqrt(ln(1/delta) + eps) -
+    sqrt(ln(1/delta)))^2), recovering the cohort-worst rho from the
+    record. With cohort == population (outside_max == -inf) the record is
+    already the population worst: leave it untouched — the inversion
+    roundtrip costs a ULP, and the identity gate demands bit equality."""
+    if math.isinf(outside_max) and outside_max < 0:
+        return
+    eps = rec["max_epsilon"]
+    cohort_rho = math.inf if math.isinf(eps) else rho_budget(eps, delta)
+    rec["max_epsilon"] = zcdp_to_dp(max(cohort_rho, outside_max), delta)
+
+
+def _outside_max_rho(store: ClientStore, cohort: np.ndarray) -> float:
+    """An exact stand-in for the worst rho among clients NOT in the cohort
+    (-inf when cohort == population), read BEFORE the round charges land.
+
+    Returns the pre-round GLOBAL max instead of masking out the cohort
+    (that mask is an O(M) copy per chunk — the one M-scaling cost the
+    cohort-scaling benchmark flagged). The substitution is exact where the
+    value is used: ``_population_epsilon_fix`` takes
+    max(cohort_worst_after_round, outside_max), rho is non-decreasing, and
+    pre_global_max = max(outside_max, pre_cohort_max) with pre_cohort_max
+    <= cohort_worst_after_round — so the max is unchanged."""
+    if len(cohort) == store.population:
+        return -math.inf
+    return store.max_rho()
+
+
+def _scatter_back(pstate: PopulationState, cohort: np.ndarray,
+                  fl: FLState, n_rounds: int) -> PopulationState:
+    """Write the round's cohort state back into the store. The residual
+    fetch is the cohort path's one forced device sync (per round for the
+    per-round driver, per chunk for the fused one)."""
+    pstate.store.scatter_rho(cohort, fl.rho)
+    if pstate.store.needs_residual():
+        pstate.store.scatter_residual(cohort, np.asarray(fl.residual))
+    pstate.store.note_participation(cohort, n_rounds)
+    return pstate.replace(fl=fl)
+
+
+def run_cohort_round(spec: FederationSpec, pstate: PopulationState,
+                     population: ClientPopulation, rng,
+                     cohort_sampler: CohortSampler | None = None,
+                     check_budgets: bool = True,
+                     ) -> tuple[PopulationState, dict]:
+    """One cohort round: sample K of M, gather, run the compiled K-block
+    round (``repro.api.run_round``, same engine cache), scatter back.
+
+    Returns (successor state, record); the record is the dense round record
+    with ``max_epsilon`` lifted to the population worst. Raises
+    ``BudgetExceeded`` (state untouched) like the dense driver. Input
+    device buffers are donated — continue from the returned state."""
+    if check_budgets:
+        which = exceeds_population_budgets(spec, pstate)
+        if which is not None:
+            _raise_budget(which, spec)
+    sampler = _resolve_cohort_sampler(spec, cohort_sampler)
+    cohort = _check_cohort(spec, population, sampler(
+        pstate.fl.rounds_done, spec.population, spec.n_clients))
+    batch = cohort_batch(spec, population, cohort, rng)
+    outside_max = _outside_max_rho(pstate.store, cohort)
+    fl, rec = run_round(spec, _gathered_fl(spec, pstate, cohort), batch,
+                        check_budgets=False)
+    new = _scatter_back(pstate, cohort, fl, 1)
+    _population_epsilon_fix(rec, outside_max, spec.delta)
+    return new, rec
+
+
+def run_cohort_rounds(spec: FederationSpec, pstate: PopulationState,
+                      population: ClientPopulation, rng,
+                      n_rounds: int | None = None,
+                      cohort_sampler: CohortSampler | None = None,
+                      check_budgets: bool = True,
+                      cohort: np.ndarray | None = None,
+                      batches: Any = None,
+                      prefetch: Callable[[], None] | None = None,
+                      ) -> tuple[PopulationState, list[dict]]:
+    """A fused chunk of R rounds over ONE cohort (resampled per chunk).
+
+    The chunk runs through ``repro.api.run_rounds`` — one jitted
+    ``lax.scan`` dispatch over the K-block, one host sync — with the
+    cohort's sticky state gathered before and scattered after. ``cohort``
+    and ``batches`` may be passed pre-built (the double-buffered prefetch
+    of :func:`train_population`); otherwise the cohort is drawn for round
+    index ``fl.rounds_done`` and the batches built from ``rng``. A raising
+    ``prefetch`` propagates as ``PrefetchFailed`` carrying the completed
+    *PopulationState* (store already updated), mirroring the dense
+    contract."""
+    sampler = _resolve_cohort_sampler(spec, cohort_sampler)
+    if cohort is None:
+        if batches is not None:
+            raise ValueError("pre-built batches need their cohort")
+        cohort = sampler(pstate.fl.rounds_done, spec.population,
+                         spec.n_clients)
+    cohort = _check_cohort(spec, population, cohort)
+    if batches is None:
+        if n_rounds is None or n_rounds <= 0:
+            raise ValueError(f"n_rounds must be positive, got {n_rounds}")
+        batches = cohort_batches(spec, population, cohort, rng, n_rounds)
+    if check_budgets:
+        lead = int(jax.tree.leaves(batches)[0].shape[0])
+        ok, which = rounds_within_population_budgets(
+            spec, pstate, n_rounds if n_rounds is not None else lead)
+        if ok < (n_rounds if n_rounds is not None else lead):
+            _raise_budget(which, spec)
+    outside_max = _outside_max_rho(pstate.store, cohort)
+    try:
+        fl, recs = run_rounds(spec, _gathered_fl(spec, pstate, cohort),
+                              batches, n_rounds, check_budgets=False,
+                              prefetch=prefetch)
+    except PrefetchFailed as pf:
+        new = _scatter_back(pstate, cohort, pf.state, len(pf.records))
+        for rec in pf.records:
+            _population_epsilon_fix(rec, outside_max, spec.delta)
+        raise PrefetchFailed(pf.__cause__, new, pf.records) from pf.__cause__
+    new = _scatter_back(pstate, cohort, fl, len(recs))
+    for rec in recs:
+        _population_epsilon_fix(rec, outside_max, spec.delta)
+    return new, recs
+
+
+# ---------------------------------------------------------------------------
+# budget-aware training driver
+# ---------------------------------------------------------------------------
+
+def train_population(spec: FederationSpec, pstate: PopulationState,
+                     population: ClientPopulation,
+                     cohort_sampler: CohortSampler | None = None,
+                     max_rounds: int = 10_000,
+                     eval_fn: Callable | None = None, eval_every: int = 1,
+                     rng=None, history: list[dict] | None = None,
+                     chunk_rounds: int = 1,
+                     ) -> tuple[PopulationState, dict]:
+    """Cohort-executed ``repro.api.train``: rounds until a budget binds.
+
+    ``chunk_rounds=R > 1`` fuses R rounds per XLA dispatch over one cohort
+    (cohorts resample at chunk boundaries), with the next chunk's cohort
+    drawn and its batches built + ``device_put`` while the current chunk
+    computes. The whole budget/prefetch/tail/eval structure IS the dense
+    driver's — one shared :func:`repro.api.state.budget_train_loop` —
+    parameterized here with cohort probes
+    (:func:`rounds_within_population_budgets`) and cohort chunks
+    ``(cohort, device batches)``. Returns (state, summary) shaped like
+    ``repro.api.train``'s."""
+    if rng is None:
+        rng = np.random.default_rng(spec.seed)
+    sampler = _resolve_cohort_sampler(spec, cohort_sampler)
+    history = [] if history is None else history
+
+    def build_chunk(start: int, n: int):
+        cohort = sampler(start, spec.population, spec.n_clients)
+        return (cohort, jax.device_put(
+            cohort_batches(spec, population, cohort, rng, n)))
+
+    def run_chunk(ps, chunk, n, prefetch):
+        cohort, batches = chunk
+        return run_cohort_rounds(spec, ps, population, rng, n,
+                                 cohort_sampler=sampler, check_budgets=False,
+                                 cohort=cohort, batches=batches,
+                                 prefetch=prefetch)
+
+    pstate, best = budget_train_loop(
+        state=pstate, max_rounds=max_rounds, eval_fn=eval_fn,
+        eval_every=eval_every, history=history, chunk_rounds=chunk_rounds,
+        rounds_done=lambda ps: ps.fl.rounds_done,
+        exceeds=lambda ps: exceeds_population_budgets(spec, ps) is not None,
+        safe_rounds=lambda ps, cap: rounds_within_population_budgets(
+            spec, ps, cap)[0],
+        run_single=lambda ps: run_cohort_round(
+            spec, ps, population, rng, cohort_sampler=sampler,
+            check_budgets=False),
+        build_chunk=build_chunk, run_chunk=run_chunk,
+        # tail rows were built for this chunk's cohort, so it stays fixed
+        # across them (per-round path, reusing the compiled single round)
+        run_tail=lambda ps, chunk, r: _cohort_round_from_row(
+            spec, ps, population, chunk[0], chunk[1], r),
+        eval_model=lambda ps: eval_params(spec, ps.fl))
+    return pstate, {
+        "best": best, "rounds": pstate.fl.rounds_done,
+        "resource_spent": pstate.fl.resource_spent,
+        "max_epsilon": zcdp_to_dp(pstate.store.max_rho(), spec.delta),
+        "history": history,
+    }
+
+
+def _cohort_round_from_row(spec, pstate, population, cohort, batches, r):
+    """Tail-chunk helper: run round ``r`` of a pre-built chunk through the
+    per-round path, keeping the CHUNK's cohort (the batches were built for
+    it)."""
+    row = jax.tree.map(lambda x, r=r: x[r], batches)
+    cohort = _check_cohort(spec, population, cohort)
+    outside_max = _outside_max_rho(pstate.store, cohort)
+    fl, rec = run_round(spec, _gathered_fl(spec, pstate, cohort), row,
+                        check_budgets=False)
+    new = _scatter_back(pstate, cohort, fl, 1)
+    _population_epsilon_fix(rec, outside_max, spec.delta)
+    return new, rec
+
+
+# ---------------------------------------------------------------------------
+# checkpoint / resume
+# ---------------------------------------------------------------------------
+
+def save_population_state(directory: str, pstate: PopulationState,
+                          extra: dict | None = None) -> None:
+    """Persist a PopulationState: the FLState checkpoint plus the
+    ClientStore (sparse residual rows + per-vid ledger) alongside it."""
+    save_state(directory, pstate.fl,
+               extra={"population": int(pstate.store.population),
+                      **(extra or {})})
+    pstate.store.save(os.path.join(directory, STORE_FILENAME))
+
+
+def load_population_state(directory: str, like: PopulationState,
+                          ) -> tuple[PopulationState, dict]:
+    """Restore a PopulationState saved by :func:`save_population_state`.
+
+    ``like`` supplies the pytree structure (a fresh
+    ``init_population_state``); the store is restored wholesale and
+    validated against ``like``'s population geometry."""
+    fl, extra = load_state(directory, like.fl)
+    store = ClientStore.load(os.path.join(directory, STORE_FILENAME))
+    if store.population != like.store.population:
+        raise ValueError(f"checkpoint population {store.population} != "
+                         f"spec population {like.store.population}")
+    if store.residual_dim != like.store.residual_dim:
+        raise ValueError(f"checkpoint residual_dim {store.residual_dim} != "
+                         f"{like.store.residual_dim} (compressor mismatch?)")
+    return PopulationState(fl=fl, store=store), extra

@@ -338,12 +338,32 @@ def test_federated_batch_sizes_proportional():
     uniform = fed.batch_sizes(16)
     assert uniform == [16] * 5
     prop = fed.batch_sizes(16, proportional=True)
-    assert len(prop) == 5 and all(x >= 1 for x in prop)
-    # same total budget (up to rounding), ordered like the client sizes
-    assert sum(prop) == pytest.approx(16 * 5, abs=5)
-    sizes = [c.n_train for c in fed.clients]
-    assert np.argmax(prop) == np.argmax(sizes)
+    assert len(prop) == 5 and all(1 <= x <= 16 for x in prop)
+    # capped at the total budget (big clients saturate at batch_size),
+    # ordered like the client sizes up to the cap
+    assert sum(prop) <= 16 * 5
+    sizes = np.asarray([c.n_train for c in fed.clients])
+    assert prop[int(np.argmax(sizes))] == max(prop)
     assert prop != uniform
+
+
+def test_federated_batch_sizes_cap_is_enforced():
+    """Satellite pin: the X_m <= executed-batch cap lives INSIDE
+    batch_sizes, not in callers. A client owning almost all the data would
+    proportionally claim ~C*batch_size — an X_m above the sampled batch
+    claims a 2G/X_m sensitivity smaller than the executed mechanism's,
+    so batch_sizes must clamp it to batch_size."""
+    from repro.data import adult_like, split_dirichlet
+    # extreme skew: near-degenerate Dirichlet gives one dominant client
+    fed = split_dirichlet(adult_like(n=4000, dim=6, seed=1), 4, alpha=0.02,
+                          seed=3)
+    sizes = [c.n_train for c in fed.clients]
+    assert max(sizes) > sum(sizes) // 2          # the skew is real
+    prop = fed.batch_sizes(8, proportional=True)
+    uncapped = round(8 * 4 * max(sizes) / sum(sizes))
+    assert uncapped > 8                          # cap actually binds
+    assert max(prop) == 8                        # ...and is enforced
+    assert all(1 <= x <= 8 for x in prop)
 
 
 # ------------------- CI smoke leg (REPRO_SMOKE_COMPRESSOR) ------------------

@@ -92,8 +92,11 @@ def test_resolve_backend_env_override(monkeypatch):
 
 
 def test_resolve_backend_probe_fallback(monkeypatch):
-    """auto walks pallas > interpret > ref by (monkeypatched) capability."""
+    """On TPU, auto walks pallas > interpret > ref by (monkeypatched)
+    capability — interpret is a sensible fallback there (same Mosaic
+    lowering semantics, and the oracle may not be tuned for the platform)."""
     monkeypatch.delenv(dispatch.KERNEL_BACKEND_ENV, raising=False)
+    monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
 
     def works(table):
         return lambda name, backend: table.get(backend, backend == "ref")
@@ -107,6 +110,26 @@ def test_resolve_backend_probe_fallback(monkeypatch):
     monkeypatch.setattr(dispatch, "backend_works",
                         works({"pallas": False, "interpret": False}))
     assert resolve_backend("dp_clip_noise", "auto") == "ref"
+
+
+def test_resolve_backend_ref_outranks_interpret_off_tpu(monkeypatch):
+    """ROADMAP open item (closed): on non-TPU backends the auto probe ranks
+    the jnp oracle ABOVE pallas interpret mode (~100x slower on CPU) — a
+    working interpret backend no longer captures the engine hot path."""
+    monkeypatch.delenv(dispatch.KERNEL_BACKEND_ENV, raising=False)
+
+    def works(table):
+        return lambda name, backend: table.get(backend, backend == "ref")
+
+    for platform in ("cpu", "gpu"):
+        monkeypatch.setattr(jax, "default_backend", lambda p=platform: p)
+        monkeypatch.setattr(dispatch, "backend_works",
+                            works({"pallas": False, "interpret": True}))
+        assert resolve_backend("dp_clip_noise", "auto") == "ref"
+    # explicit interpret (arg or env) still reachable for the parity suites
+    assert resolve_backend("dp_clip_noise", "interpret") == "interpret"
+    monkeypatch.setenv(dispatch.KERNEL_BACKEND_ENV, "interpret")
+    assert resolve_backend("dp_clip_noise", "auto") == "interpret"
 
 
 def test_backend_works_probe_failure_reads_as_unavailable(monkeypatch):

@@ -1,0 +1,559 @@
+"""repro.population tests: cohort-path identity vs the dense participation
+path (M == C, engine x compressor matrix), ClientStore sparse-residual
+checkpoint-resume identity, population accounting (K/M monotonicity,
+conditional-ledger soundness), cohort samplers, and the device-memory
+boundedness gate (block bytes independent of M)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (
+    FederationSpec,
+    init_state,
+    round_batch,
+    round_rho_charges,
+    run_round,
+    train,
+)
+from repro.core.privacy import (
+    composed_subsampling_q,
+    gaussian_zcdp,
+    grad_sensitivity,
+    zcdp_to_dp,
+)
+from repro.data import adult_like, split_iid
+from repro.models.linear import init_linear, logreg_loss
+from repro.optim import sgd
+from repro.population import (
+    ClientStore,
+    HeterogeneousCohort,
+    UniformCohort,
+    device_block_bytes,
+    exceeds_population_budgets,
+    init_population_state,
+    load_population_state,
+    peek_population_epsilon,
+    population_from_federated,
+    population_from_sampler,
+    run_cohort_round,
+    run_cohort_rounds,
+    save_population_state,
+    synthetic_population,
+    train_population,
+)
+
+C, TAU, DIM, B = 4, 2, 8, 4
+OPT = sgd(0.2)          # one optimizer instance -> engine caches shared
+
+
+def _spec(**kw):
+    base = dict(n_clients=C, tau=TAU, loss_fn=logreg_loss, optimizer=OPT,
+                clip_norm=1.0, dp=True, sigmas=(0.5,) * C,
+                batch_sizes=(B,) * C, kernel_backend="ref")
+    base.update(kw)
+    return FederationSpec(**base)
+
+
+def _pop_spec(population, n_clients=C, **kw):
+    return _spec(n_clients=n_clients, population=population,
+                 cohort_size=n_clients,
+                 sigmas=(0.5,) * n_clients, batch_sizes=(B,) * n_clients,
+                 **kw)
+
+
+@pytest.fixture(scope="module")
+def fed():
+    return split_iid(adult_like(n=400, dim=DIM, seed=0), C)
+
+
+# ---------------------------- spec surface ----------------------------------
+
+def test_population_spec_validation():
+    s = _pop_spec(1000)
+    assert s.is_population() and s.cohort_size == C
+    assert s.cohort_fraction() == pytest.approx(C / 1000)
+    assert not _spec().is_population() and _spec().cohort_fraction() == 1.0
+    with pytest.raises(ValueError):        # cohort_size without population
+        _spec(cohort_size=C)
+    with pytest.raises(ValueError):        # cohort must fit the population
+        _spec(population=C - 1)
+    with pytest.raises(ValueError):        # K is the device block
+        _spec(population=100, cohort_size=C + 1)
+    with pytest.raises(ValueError):        # slots host changing clients
+        _spec(population=100, sigmas=(0.5, 0.5, 0.5, 0.6))
+    with pytest.raises(ValueError):
+        _spec(population=100, batch_sizes=(B, B, B, B + 1))
+    with pytest.raises(ValueError):        # cohorts need the re-broadcast
+        _spec(population=100, topology="local_only")
+
+
+def test_population_not_in_engine_key():
+    """Sweeping M at fixed K must reuse one compiled round (and the M == C
+    identity gate runs literally the same executable)."""
+    assert _pop_spec(100).engine_key() == _pop_spec(100_000).engine_key()
+    assert _pop_spec(100).engine_key() == _spec().engine_key()
+    assert _pop_spec(100).ledger_key() == _spec().ledger_key()
+
+
+def test_accounting_q_composes_cohort_and_participation():
+    assert _pop_spec(1000).accounting_q() == 1.0     # sound default
+    amp = _pop_spec(1000, amplify_participation=True)
+    assert amp.accounting_q() == pytest.approx(C / 1000)
+    both = _pop_spec(1000, participation=0.5, amplify_participation=True)
+    assert both.accounting_q() == pytest.approx((C / 1000) * 0.5)
+    assert composed_subsampling_q(0.5, 0.25) == pytest.approx(0.125)
+    assert composed_subsampling_q() == 1.0
+    with pytest.raises(ValueError):
+        composed_subsampling_q(0.5, 1.5)
+    with pytest.raises(ValueError):
+        composed_subsampling_q(0.0)
+
+
+# ---------------------------- populations -----------------------------------
+
+def test_synthetic_population_is_lazy_and_deterministic():
+    pop = synthetic_population(1_000_000, dim=DIM, batch_size=B, alpha=0.3,
+                               seed=7)
+    a = pop.sampler(123_456, TAU, np.random.default_rng(5))
+    b = pop.sampler(123_456, TAU, np.random.default_rng(5))
+    np.testing.assert_array_equal(a["x"], b["x"])
+    np.testing.assert_array_equal(a["y"], b["y"])
+    assert a["x"].shape == (TAU, B, DIM) and a["x"].dtype == np.float32
+    assert set(np.unique(a["y"])) <= {0, 1}
+    # unit-ball features (paper §4), different clients differ
+    assert float(np.linalg.norm(a["x"], axis=-1).max()) <= 1.0 + 1e-5
+    other = pop.sampler(7, TAU, np.random.default_rng(5))
+    assert np.abs(a["x"] - other["x"]).max() > 0
+
+
+def test_synthetic_population_label_skew_scales_with_alpha():
+    """Small alpha -> most clients dominated by one class; large alpha ->
+    balanced. Measured over per-client label rates."""
+    def dominance(alpha):
+        pop = synthetic_population(500, dim=4, batch_size=64, alpha=alpha,
+                                   seed=0)
+        rng = np.random.default_rng(0)
+        rates = [pop.sampler(v, 1, rng)["y"].mean() for v in range(40)]
+        return np.mean([max(r, 1 - r) for r in rates])
+
+    assert dominance(0.05) > 0.9
+    assert dominance(100.0) < 0.65
+
+
+# ---------------------------- cohort samplers -------------------------------
+
+def test_uniform_cohort_sorted_unique_deterministic():
+    s = UniformCohort(seed=3)
+    a = s(5, 10_000, 16)
+    assert a.shape == (16,) and np.all(np.diff(a) > 0)   # sorted, unique
+    np.testing.assert_array_equal(a, s(5, 10_000, 16))   # stateless replay
+    assert np.any(a != s(6, 10_000, 16))                 # varies per round
+    # full cohort is canonical arange (the identity-gate anchor)
+    np.testing.assert_array_equal(s(0, C, C), np.arange(C))
+    # rejection path (K << M) stays within range and exact-size
+    big = s(0, 5_000_000, 8)
+    assert big.shape == (8,) and big.min() >= 0 and big.max() < 5_000_000
+    with pytest.raises(ValueError):
+        s(0, 10, 11)
+
+
+def test_heterogeneous_cohort_availability_bias_and_dropout():
+    model = HeterogeneousCohort(seed=1, availability=(8.0, 2.0), dropout=0.2)
+    m = 2_000
+    counts = np.zeros(m)
+    for r in range(150):
+        cohort = model(r, m, 32)
+        assert cohort.shape == (32,) and np.unique(cohort).size == 32
+        counts[cohort] += 1
+    rates = model.rates(m)
+    lo, hi = rates < np.quantile(rates, 0.2), rates > np.quantile(rates, 0.8)
+    # rarely-available devices are sampled measurably less often
+    assert counts[hi].mean() > 1.5 * counts[lo].mean()
+    np.testing.assert_array_equal(model(3, m, 32), model(3, m, 32))
+    with pytest.raises(ValueError):
+        HeterogeneousCohort(dropout=1.0)
+    with pytest.raises(ValueError):
+        HeterogeneousCohort(availability=(0.0, 1.0))
+
+
+def test_heterogeneous_dropout_is_observable_selection_bias():
+    """Dropout must CHANGE the realized cohort distribution (an
+    identity-blind drop + backfill from the same uniform order would be a
+    distributional no-op): unreliability-weighted dropout skews selection
+    toward reliable devices beyond availability alone."""
+    m, k, rounds = 500, 16, 300
+
+    def quintile_means(dropout):
+        model = HeterogeneousCohort(seed=2, availability=(2.0, 2.0),
+                                    dropout=dropout)
+        counts = np.zeros(m)
+        for r in range(rounds):
+            counts[model(r, m, k)] += 1
+        rates = model.rates(m)
+        return (counts[rates < np.quantile(rates, 0.2)].mean(),
+                counts[rates > np.quantile(rates, 0.8)].mean())
+
+    base_lo, base_hi = quintile_means(0.0)
+    drop_lo, drop_hi = quintile_means(0.8)
+    assert drop_lo < 0.5 * base_lo      # flaky devices squeezed out...
+    assert drop_hi > 1.5 * base_hi      # ...reliable ones over-selected
+
+
+# ------------------- identity gate: cohort path == dense path ---------------
+
+IDENTITY_SETTINGS = [
+    ("dense", dict()),
+    ("q50", dict(participation=0.5)),
+    ("topk25", dict(compressor="topk", compression_ratio=0.25)),
+    ("qsgd4-q50", dict(compressor="qsgd", compression_bits=4,
+                       participation=0.5)),
+]
+
+
+@pytest.mark.parametrize("engine", ["vmap", "map", "shard_map"])
+@pytest.mark.parametrize("name,kw", IDENTITY_SETTINGS,
+                         ids=[n for n, _ in IDENTITY_SETTINGS])
+def test_cohort_path_identity_with_full_population(engine, name, kw, fed):
+    """M == C with cohort == population is bit-for-bit the dense
+    participation path: same compiled round (population is not in the
+    engine key), same RNG streams, same ledger — across every engine and
+    pipeline setting."""
+    dense = _spec(engine=engine, **kw)
+    pspec = _spec(engine=engine, population=C, cohort_size=C, **kw)
+    pop = population_from_federated(fed, B)
+    s_d = init_state(dense, init_linear(DIM))
+    s_p = init_population_state(pspec, init_linear(DIM))
+    rng_d, rng_p = np.random.default_rng(0), np.random.default_rng(0)
+    sampler = fed.make_sampler(B)
+    for _ in range(3):
+        s_d, rec_d = run_round(dense, s_d, round_batch(dense, sampler, rng_d),
+                               check_budgets=False)
+        s_p, rec_p = run_cohort_round(pspec, s_p, pop, rng_p,
+                                      check_budgets=False)
+        assert float(rec_p["loss"]) == float(rec_d["loss"])
+        assert rec_p["max_epsilon"] == rec_d["max_epsilon"]
+        assert rec_p["participants"] == rec_d["participants"]
+    for a, b in zip(jax.tree.leaves(s_d.params),
+                    jax.tree.leaves(s_p.fl.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(s_d.rho, s_p.store.rho)
+    assert s_d.resource_spent == s_p.fl.resource_spent
+    if s_d.residual is not None:
+        np.testing.assert_array_equal(
+            np.asarray(s_d.residual),
+            s_p.store.gather_residual(np.arange(C)))
+
+
+def test_chunked_cohort_train_identity_with_full_population(fed):
+    """train_population(chunk_rounds=R) over cohort == population matches
+    dense train(chunk_rounds=R) exactly (the fused run_rounds driver works
+    under cohort execution, cohorts resampled at chunk boundaries)."""
+    kw = dict(compressor="topk", compression_ratio=0.25, participation=0.5,
+              eps_th=1e9, c_th=1e9)
+    dense, pspec = _spec(**kw), _spec(population=C, cohort_size=C, **kw)
+    pop = population_from_federated(fed, B)
+    s_d, out_d = train(dense, init_state(dense, init_linear(DIM)),
+                       fed.make_sampler(B), max_rounds=5, chunk_rounds=2)
+    s_p, out_p = train_population(
+        pspec, init_population_state(pspec, init_linear(DIM)), pop,
+        max_rounds=5, chunk_rounds=2)
+    assert out_d["rounds"] == out_p["rounds"] == 5
+    for a, b in zip(jax.tree.leaves(s_d.params),
+                    jax.tree.leaves(s_p.fl.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(s_d.rho, s_p.store.rho)
+    for rd, rp in zip(out_d["history"], out_p["history"]):
+        assert rd["loss"] == rp["loss"]
+        assert rd["max_epsilon"] == rp["max_epsilon"]
+
+
+# ------------------- cohort execution over a real population ----------------
+
+def test_device_block_bounded_by_cohort_not_population():
+    """The tentpole memory gate: the device-resident block (params,
+    opt_state, residual, batch) is byte-identical across M = 100 and
+    M = 100_000 at fixed K — device memory is O(K), independent of M."""
+    sizes = {}
+    for m in (100, 100_000):
+        spec = _pop_spec(m, compressor="topk", compression_ratio=0.25)
+        pop = synthetic_population(m, dim=DIM, batch_size=B, seed=1)
+        ps = init_population_state(spec, init_linear(DIM))
+        rng = np.random.default_rng(0)
+        cohort = UniformCohort(0)(0, m, C)
+        from repro.population import cohort_batch
+        batch = cohort_batch(spec, pop, cohort, rng)
+        sizes[m] = device_block_bytes(ps, batch)
+        for leaf in jax.tree.leaves(batch):
+            assert leaf.shape[0] == C          # K rows, never M
+    assert sizes[100] == sizes[100_000] > 0
+
+
+def test_cohort_round_charges_only_sampled_clients():
+    m = 1_000
+    spec = _pop_spec(m)
+    pop = synthetic_population(m, dim=DIM, batch_size=B, seed=2)
+    ps = init_population_state(spec, init_linear(DIM))
+    seen = set()
+    for r in range(4):
+        ps, rec = run_cohort_round(spec, ps, pop, np.random.default_rng(r),
+                                   check_budgets=False)
+        seen |= set(np.flatnonzero(ps.store.rounds_participated).tolist())
+    charged = np.flatnonzero(ps.store.rho)
+    assert 0 < charged.size <= 4 * C
+    assert set(charged.tolist()) <= seen
+    # conditional-ledger soundness: every realized participant pays the
+    # FULL Lemma-2 per-step rho for exactly the rounds it ran
+    per_round = TAU * gaussian_zcdp(grad_sensitivity(1.0, B), 0.5)
+    np.testing.assert_allclose(
+        ps.store.rho[charged],
+        ps.store.rounds_participated[charged] * per_round, rtol=1e-12)
+    assert rec["max_epsilon"] == pytest.approx(
+        zcdp_to_dp(ps.store.max_rho(), spec.delta))
+
+
+def test_population_amplification_monotone_in_m():
+    """K/M accounting: at fixed K, growing the population strictly tightens
+    the amplified per-step charge (and the sound default is unaffected)."""
+    qs = [_pop_spec(m, amplify_participation=True).accounting_q()
+          for m in (10, 100, 10_000, 1_000_000)]
+    assert all(a > b for a, b in zip(qs, qs[1:]))
+    assert _pop_spec(1_000_000).accounting_q() == 1.0
+    # the charge vector the drivers use scales exactly by q
+    amp = round_rho_charges(_pop_spec(1000, amplify_participation=True))
+    full = round_rho_charges(_pop_spec(1000))
+    np.testing.assert_allclose(amp, full * (C / 1000), rtol=1e-12)
+
+
+def test_population_budget_probe_and_train_stop():
+    m = 200
+    c_th = 3 * (100.0 + TAU)       # exactly 3 rounds of resource
+    spec = _pop_spec(m, c_th=c_th, eps_th=1e9)
+    pop = synthetic_population(m, dim=DIM, batch_size=B, seed=3)
+    ps = init_population_state(spec, init_linear(DIM))
+    assert exceeds_population_budgets(spec, ps) is None
+    ps, out = train_population(spec, ps, pop, max_rounds=50)
+    assert out["rounds"] == 3
+    assert exceeds_population_budgets(spec, ps) == "resource"
+    # privacy probe: conservative (assumes the worst client is resampled)
+    eps_next = peek_population_epsilon(spec, ps, 1)
+    assert eps_next > out["max_epsilon"] > 0
+    from repro.api import BudgetExceeded
+    with pytest.raises(BudgetExceeded):
+        run_cohort_round(spec, ps, pop, np.random.default_rng(0))
+
+
+def test_amplified_accounting_requires_uniform_cohorts():
+    """amplify_participation=True charges q_eff = K/M per realized step —
+    a bound stated for UNIFORM cohorts. The drivers must refuse it under
+    an availability-skewed sampler (a high-rate device realizes more than
+    K/M of the rounds, so the reported epsilon would understate its true
+    loss) instead of silently under-reporting."""
+    m = 100
+    spec = _pop_spec(m, amplify_participation=True)
+    pop = synthetic_population(m, dim=DIM, batch_size=B, seed=8)
+    ps = init_population_state(spec, init_linear(DIM))
+    hetero = HeterogeneousCohort(seed=0)
+    with pytest.raises(ValueError, match="uniform"):
+        run_cohort_round(spec, ps, pop, np.random.default_rng(0),
+                         cohort_sampler=hetero, check_budgets=False)
+    with pytest.raises(ValueError, match="uniform"):
+        train_population(spec, ps, pop, cohort_sampler=hetero, max_rounds=1)
+    # uniform cohorts (and the skewed sampler under the sound default
+    # conditional ledger) stay allowed
+    ps, _ = run_cohort_round(spec, ps, pop, np.random.default_rng(0),
+                             check_budgets=False)
+    sound = _pop_spec(m)
+    ps2 = init_population_state(sound, init_linear(DIM))
+    run_cohort_round(sound, ps2, pop, np.random.default_rng(0),
+                     cohort_sampler=hetero, check_budgets=False)
+
+
+def test_heterogeneous_cohort_trains_and_skews_ledger():
+    m = 500
+    spec = _pop_spec(m, eps_th=1e9, c_th=1e9)
+    pop = synthetic_population(m, dim=DIM, batch_size=B, seed=4)
+    ps = init_population_state(spec, init_linear(DIM))
+    hetero = HeterogeneousCohort(seed=9, availability=(2.0, 2.0),
+                                 dropout=0.1)
+    ps, out = train_population(spec, ps, pop, cohort_sampler=hetero,
+                               max_rounds=6, chunk_rounds=3)
+    assert out["rounds"] == 6
+    assert np.isfinite(out["history"][-1]["loss"])
+    part = ps.store.rounds_participated
+    assert part.sum() == 6 * C and (part > 0).sum() <= 6 * C
+
+
+# ------------------- ClientStore -------------------------------------------
+
+def test_client_store_sparse_residual_gather_scatter():
+    store = ClientStore(1000, residual_dim=5)
+    cohort = np.asarray([3, 500, 999])
+    np.testing.assert_array_equal(store.gather_residual(cohort),
+                                  np.zeros((3, 5), np.float32))
+    block = np.asarray([[1, 0, 0, 0, 0],
+                        [0, 0, 0, 0, 0],
+                        [0, 2, 0, 0, 3]], np.float32)
+    store.scatter_residual(cohort, block)
+    assert store.residual_rows() == 2           # all-zero row not stored
+    np.testing.assert_array_equal(store.gather_residual(cohort), block)
+    # zeroing a row prunes it
+    store.scatter_residual(np.asarray([3]), np.zeros((1, 5), np.float32))
+    assert store.residual_rows() == 1
+    with pytest.raises(ValueError):
+        store.scatter_residual(cohort, np.zeros((2, 5), np.float32))
+    with pytest.raises(ValueError):
+        ClientStore(1000).gather_residual(cohort)   # built without residual
+
+
+def test_client_store_save_load_roundtrip(tmp_path):
+    store = ClientStore(50, residual_dim=4)
+    store.rho[7] = 0.25
+    store.rho[11] = np.inf
+    store.rounds_participated[7] = 3
+    store.scatter_residual(np.asarray([7, 20]),
+                           np.asarray([[1., 2, 3, 4], [0, 0, 5, 0]],
+                                      np.float32))
+    path = str(tmp_path / "store.npz")
+    store.save(path)
+    back = ClientStore.load(path)
+    assert back.population == 50 and back.residual_dim == 4
+    np.testing.assert_array_equal(back.rho, store.rho)
+    np.testing.assert_array_equal(back.rounds_participated,
+                                  store.rounds_participated)
+    assert back.residual_rows() == 2
+    np.testing.assert_array_equal(back.gather_residual(np.asarray([7, 20])),
+                                  store.gather_residual(np.asarray([7, 20])))
+
+
+def test_population_checkpoint_resume_identity(tmp_path):
+    """Save mid-run, resume, continue — bit-identical to the uninterrupted
+    run (params, per-vid rho ledger, sparse residual rows). The cohort
+    schedule is stateless per round index and the per-round data rng is
+    re-derived per round, so resume needs no sampler state."""
+    m = 300
+    spec = _pop_spec(m, compressor="topk", compression_ratio=0.25,
+                     participation=0.5)
+    pop = synthetic_population(m, dim=DIM, batch_size=B, seed=5)
+
+    def drive(ps, start, n):
+        for r in range(start, start + n):
+            ps, _ = run_cohort_round(spec, ps, pop,
+                                     np.random.default_rng(10_000 + r),
+                                     check_budgets=False)
+        return ps
+
+    straight = drive(init_population_state(spec, init_linear(DIM)), 0, 5)
+
+    ps = drive(init_population_state(spec, init_linear(DIM)), 0, 2)
+    save_population_state(str(tmp_path), ps, extra={"note": "mid"})
+    like = init_population_state(spec, init_linear(DIM))
+    resumed, extra = load_population_state(str(tmp_path), like)
+    assert extra["note"] == "mid" and extra["population"] == m
+    assert resumed.fl.rounds_done == 2
+    assert resumed.store.residual_rows() == ps.store.residual_rows()
+    resumed = drive(resumed, 2, 3)
+
+    for a, b in zip(jax.tree.leaves(straight.fl.params),
+                    jax.tree.leaves(resumed.fl.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(straight.store.rho, resumed.store.rho)
+    np.testing.assert_array_equal(straight.store.rounds_participated,
+                                  resumed.store.rounds_participated)
+    assert (straight.store.residual_rows()
+            == resumed.store.residual_rows() > 0)
+    vids = np.flatnonzero(straight.store.rounds_participated)
+    np.testing.assert_array_equal(
+        straight.store.gather_residual(vids),
+        resumed.store.gather_residual(vids))
+
+
+def test_population_geometry_mismatch_rejected(tmp_path):
+    spec = _pop_spec(100)
+    ps = init_population_state(spec, init_linear(DIM))
+    save_population_state(str(tmp_path), ps)
+    other = init_population_state(_pop_spec(200), init_linear(DIM))
+    with pytest.raises(ValueError):
+        load_population_state(str(tmp_path), other)
+
+
+# ------------------- fused chunk driver over a population -------------------
+
+def test_run_cohort_rounds_matches_per_round_for_fixed_cohort():
+    """One chunk over a fixed cohort == the per-round driver fed the same
+    cohort rows (the dense chunk/loop identity transported to cohort
+    execution)."""
+    m = 120
+    spec = _pop_spec(m, participation=0.5)
+    pop = synthetic_population(m, dim=DIM, batch_size=B, seed=6)
+    cohort = UniformCohort(spec.seed)(0, m, C)
+
+    ps1 = init_population_state(spec, init_linear(DIM))
+    ps1, recs = run_cohort_rounds(spec, ps1, pop, np.random.default_rng(0),
+                                  n_rounds=3, check_budgets=False)
+    assert len(recs) == 3
+
+    from repro.population import cohort_batch
+    ps2 = init_population_state(spec, init_linear(DIM))
+    rng = np.random.default_rng(0)
+    rows = [cohort_batch(spec, pop, cohort, rng) for _ in range(3)]
+    from repro.population.runtime import (
+        _cohort_round_from_row,
+        _gathered_fl,
+        _scatter_back,
+    )
+    del _gathered_fl, _scatter_back
+    batches = jax.tree.map(lambda *xs: np.stack(xs), *rows)
+    for r in range(3):
+        ps2, rec = _cohort_round_from_row(spec, ps2, pop, cohort, batches, r)
+    for a, b in zip(jax.tree.leaves(ps1.fl.params),
+                    jax.tree.leaves(ps2.fl.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(ps1.store.rho, ps2.store.rho)
+
+
+# ------------------- CI smoke leg (REPRO_SMOKE_POPULATION) ------------------
+
+@pytest.mark.skipif(not os.environ.get("REPRO_SMOKE_POPULATION"),
+                    reason="set REPRO_SMOKE_POPULATION=<M> to smoke cohort "
+                           "execution at population scale in this env")
+def test_env_population_smoke():
+    """CI's population leg: M virtual clients (10_000 by default in CI),
+    K = 8 cohort, oracle kernels — per-round and fused drivers both train,
+    device block stays K-bound, ledger touches only sampled clients."""
+    m = int(os.environ["REPRO_SMOKE_POPULATION"])
+    k = 8
+    spec = FederationSpec(
+        n_clients=k, tau=TAU, loss_fn=logreg_loss, optimizer=OPT,
+        clip_norm=1.0, dp=True, sigmas=(0.5,) * k, batch_sizes=(B,) * k,
+        population=m, cohort_size=k, compressor="topk",
+        compression_ratio=0.25, eps_th=1e9, c_th=1e9)
+    pop = synthetic_population(m, dim=DIM, batch_size=B, alpha=0.3, seed=0)
+    ps = init_population_state(spec, init_linear(DIM))
+    ps, out = train_population(spec, ps, pop, max_rounds=8, chunk_rounds=4)
+    assert out["rounds"] == 8
+    assert np.isfinite(out["history"][-1]["loss"])
+    assert ps.store.rho.shape == (m,)
+    assert 0 < (ps.store.rho > 0).sum() <= 8 * k
+    for leaf in jax.tree.leaves(ps.fl.params):
+        assert leaf.shape[0] == k
+
+
+# ------------------- launch CLI --------------------------------------------
+
+def test_launch_train_population_cli(tmp_path, capsys):
+    """launch/train --population M --cohort-size K end-to-end (tiny smoke
+    transformer): trains, reports population stats, saves a resumable
+    population checkpoint."""
+    from repro.launch.train import main
+    save = str(tmp_path / "ckpt")
+    rc = main(["--arch", "gemma3-4b", "--smoke", "--rounds", "2",
+               "--population", "200", "--cohort-size", "2", "--tau", "2",
+               "--batch", "2", "--seq", "16", "--eps", "1e9",
+               "--cth", "1e9", "--save", save])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert '"population": 200' in out
+    assert os.path.exists(os.path.join(save, "client_store.npz"))
