@@ -29,6 +29,17 @@ drivers gather only the sampled cohort, so M buys scenario scale, not
 device memory or dispatch cost. ``--check`` gates the byte-flatness
 exactly and the rounds/s within a noise margin.
 
+A third scenario tracks **buffered-async federation** (repro.asyncfl) on
+a heterogeneous straggler fleet: the simulated seconds to land a target
+amount of zCDP (equivalently, R sync rounds' worth of client updates) for
+the sync barrier driver vs the B-of-K buffered-async driver under the
+same :class:`HeteroLatency` clock. The async side runs the real
+``train_async`` driver (fused flush+dispatch programs, chunked schedule
+projection), so the row also reports host flushes/s. ``--check`` gates
+``async_sim_seconds < sync_sim_seconds`` strictly — on a fleet whose
+slowest device is ~7x the fastest, losing that gap means the buffer
+semantics regressed to a barrier.
+
     PYTHONPATH=src python benchmarks/throughput.py            # full grid
     PYTHONPATH=src python benchmarks/throughput.py --smoke --check
 """
@@ -42,6 +53,13 @@ import jax
 import numpy as np
 
 from repro.api import FederationSpec, init_state, train
+from repro.api.state import round_rho_charges
+from repro.asyncfl import (
+    HeteroLatency,
+    init_async_state,
+    sync_round_duration,
+    train_async,
+)
 from repro.models.linear import init_linear, logreg_loss
 from repro.optim import sgd
 from repro.population import (
@@ -167,6 +185,54 @@ def run_cohort_scaling(smoke: bool) -> list[dict]:
     return rows
 
 
+def run_async_hetero(smoke: bool) -> dict:
+    """Simulated-seconds-to-target-rho on a straggler fleet.
+
+    The target is the total landed zCDP of ``rounds_sync`` full sync
+    rounds (every client charged the Lemma-2 round rho each round). Sync
+    reaches it in ``sum(max-over-fleet latency)`` simulated seconds; the
+    async driver lands the same total after ``rounds_sync * K / B``
+    flushes (dense spec: every arrival participates and carries the same
+    charge), and its clock only ever waits for the B-th earliest arrival.
+    """
+    rounds_sync, buffer_size = (6, 2) if smoke else (12, 2)
+    flushes = rounds_sync * C // buffer_size
+    spec = reference_spec("async_buffered", "none", 1.0,
+                          buffer_size=buffer_size, staleness_alpha=0.5,
+                          eps_th=1e9, c_th=1e9)
+    lat = HeteroLatency(0, fleet=C, slow_factor=6.0)
+    target_rho = rounds_sync * float(round_rho_charges(spec).sum())
+    sync_sim = sum(sync_round_duration(lat, C, r)
+                   for r in range(rounds_sync))
+    sampler = make_sampler()
+    rng = np.random.default_rng(0)
+    st = init_async_state(spec, init_linear(DIM), sampler, rng=rng,
+                          latency_model=lat)
+    t0 = time.perf_counter()
+    st, out = train_async(spec, st, sampler, max_rounds=flushes, rng=rng,
+                          chunk_rounds=8, latency_model=lat)
+    jax.block_until_ready(st.global_params)
+    wall = time.perf_counter() - t0
+    assert out["rounds"] == flushes
+    landed = float(np.sum(st.fl.rho))
+    assert landed >= target_rho * (1 - 1e-9), (landed, target_rho)
+    row = {
+        "fleet": C, "buffer_size": buffer_size,
+        "rounds_sync": rounds_sync, "flushes": flushes,
+        "target_rho_landed": round(target_rho, 6),
+        "sync_sim_seconds": round(sync_sim, 4),
+        "async_sim_seconds": round(out["sim_seconds"], 4),
+        "sim_speedup": round(sync_sim / out["sim_seconds"], 2),
+        "wall_s": round(wall, 4),
+        "flushes_per_s": round(flushes / wall, 2),
+    }
+    print(f"async hetero  K={C} B={buffer_size} target_rho="
+          f"{row['target_rho_landed']:.3f}: sync {row['sync_sim_seconds']}s "
+          f"vs async {row['async_sim_seconds']}s simulated "
+          f"({row['sim_speedup']}x, {row['flushes_per_s']:.1f} flushes/s)")
+    return row
+
+
 def run_grid(smoke: bool) -> dict:
     if smoke:
         grid = [("vmap", "none", 1.0), ("vmap", "topk", 0.5)]
@@ -204,6 +270,7 @@ def run_grid(smoke: bool) -> dict:
         "results": results,
         "speedup_fused_vs_per_round": speedups,
         "cohort_scaling": run_cohort_scaling(smoke),
+        "async_hetero": run_async_hetero(smoke),
     }
 
 
@@ -252,10 +319,19 @@ def main(argv=None) -> int:
         if slow_pop:
             print(f"REGRESSION: cohort rounds/s degrades with M: {slow_pop}")
             return 1
+        # async vs sync simulated time: strict — the event schedule is
+        # deterministic (no wall-clock noise), and on a ~7x-spread fleet
+        # the buffered driver must beat the barrier outright
+        ah = report["async_hetero"]
+        if ah["async_sim_seconds"] >= ah["sync_sim_seconds"]:
+            print(f"REGRESSION: buffered-async no faster than the sync "
+                  f"barrier in simulated time: {ah}")
+            return 1
         print("throughput gate passed: fused driver within margin "
               f"(speedups: {report['speedup_fused_vs_per_round']}); "
               f"cohort scaling flat over M "
-              f"({[r['population'] for r in rows]})")
+              f"({[r['population'] for r in rows]}); "
+              f"async {ah['sim_speedup']}x sync in simulated seconds")
     return 0
 
 

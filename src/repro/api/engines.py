@@ -26,9 +26,14 @@ ship by default:
     "shard_map" explicit collective schedule (core/fl_shard_map.py): one
                 ``lax.pmean`` over the client mesh axis per round.
 
-``register_engine`` adds new execution strategies (e.g. async or hierarchical
-aggregation) without touching the drivers: everything upstream selects purely
-via ``FederationSpec.engine``.
+``register_engine`` adds new execution strategies without touching the
+drivers: everything upstream selects purely via ``FederationSpec.engine``.
+The buffered-async engine ("async_buffered", :mod:`repro.asyncfl`) is
+registered here too, but its builder returns a flush/dispatch *executor*
+rather than a round_fn — ``round_fn_for``/``chunked_round_fn_for`` refuse
+async specs and point at the ``repro.asyncfl`` drivers, and
+``engine="auto"`` never resolves to it (async execution is always an
+explicit choice).
 
 Every engine's Eq.-7a clip+noise step runs through the fused
 ``dp_clip_noise`` kernel of :mod:`repro.kernels.dispatch` — the backend is
@@ -137,6 +142,18 @@ def build_map_engine(spec: FederationSpec) -> RoundFn:
                            pipeline=spec.aggregation_pipeline())
 
 
+@register_engine("async_buffered")
+def build_async_engine(spec: FederationSpec):
+    """Buffered-async engine (repro.asyncfl): returns the per-spec
+    :class:`repro.asyncfl.engine.AsyncBufferedExecutor` — a flush/dispatch
+    executor object, NOT a ``round_fn`` (async rounds have no single
+    synchronous round function; ``round_fn_for`` refuses async specs and
+    points at the ``repro.asyncfl`` drivers). Imported lazily: asyncfl
+    builds on repro.api and a module-level import would cycle."""
+    from repro.asyncfl.engine import AsyncBufferedExecutor
+    return AsyncBufferedExecutor(spec)
+
+
 @register_engine("shard_map")
 def build_shard_map_engine(spec: FederationSpec) -> RoundFn:
     """Explicit-collective engine on a 1-D ("client",) mesh over the local
@@ -181,6 +198,11 @@ def round_fn_for(spec: FederationSpec) -> RoundFn:
     the successor state; keep using that. (Host-side copies, e.g. a
     checkpoint written before the call, are unaffected.)
     """
+    if spec.is_async():
+        raise ValueError(
+            "engine='async_buffered' has no synchronous round function: "
+            "drive it with repro.asyncfl (init_async_state / "
+            "run_async_cycle / train_async), not run_round/run_rounds")
     donate = (0, 1, 6) if spec.has_pipeline() else (0, 1)
     return _cached(
         _ROUND_FN_CACHE, spec.engine_key(),
@@ -199,6 +221,11 @@ def chunked_round_fn_for(spec: FederationSpec) -> RoundFn:
     the driver that feeds it."""
     from repro.core.fl import make_chunked_round
 
+    if spec.is_async():
+        raise ValueError(
+            "engine='async_buffered' has no fused sync scan: drive it with "
+            "repro.asyncfl.train_async (its chunking is host-paced over "
+            "the simulated event schedule)")
     pipeline = spec.has_pipeline()
 
     def build():

@@ -25,7 +25,7 @@ from repro.core.fl import TOPOLOGIES, Budgets, FLConfig, design_sigmas
 from repro.kernels.dispatch import KERNEL_BACKENDS
 from repro.optim.optimizers import Optimizer
 
-ENGINES = ("vmap", "map", "shard_map", "auto")
+ENGINES = ("vmap", "map", "shard_map", "async_buffered", "auto")
 
 
 @dataclass(frozen=True)
@@ -41,7 +41,13 @@ class FederationSpec:
     loss_fn: Callable[[Any, Any], Any]
     optimizer: Optimizer
     topology: str = "full_average"  # "full_average" | "local_only"
-    engine: str = "auto"            # "vmap" | "map" | "shard_map" | "auto"
+    engine: str = "auto"            # "vmap" | "map" | "shard_map" |
+    #   "async_buffered" | "auto". "async_buffered" is the FedBuff-style
+    #   buffered-async engine (repro.asyncfl): the server aggregates the
+    #   first ``buffer_size`` arrivals per flush with staleness-weighted
+    #   updates and redispatches immediately — driven by
+    #   ``repro.asyncfl.train_async``, NOT by run_round/train (which raise
+    #   for it). "auto" never resolves to it: async is always explicit.
     kernel_backend: str = "auto"    # clip+noise kernel backend
     #   ("pallas" | "interpret" | "ref" | "auto"): every engine's Eq.-7a
     #   clip+noise step runs through kernels.dispatch get_kernel(
@@ -80,6 +86,17 @@ class FederationSpec:
     #   equal it (the one device-block size there is). Accounting-only
     #   like ``population``: M is NOT part of engine_key(), so population
     #   sweeps at fixed K reuse one compiled round.
+
+    # -- buffered-async federation (repro.asyncfl; engine="async_buffered")
+    buffer_size: int | None = None  # B: arrivals aggregated per flush.
+    #   None -> n_clients (the degenerate buffer whose zero-latency-spread
+    #   alpha=0 run is bit-for-bit the sync vmap path — the identity gate).
+    #   Part of engine_key(): B is the flush/dispatch block shape.
+    staleness_alpha: float = 0.0    # staleness-weight exponent: an arrival
+    #   that trained on a model s versions old is folded in with weight
+    #   w(s) = 1 / (1 + s)^alpha (alpha=0: every arrival counts fully).
+    #   Runtime operand, NOT in engine_key() — alpha sweeps reuse one
+    #   compiled flush.
 
     # -- DP mechanism (Eq. 7a) ---------------------------------------------
     dp: bool = True
@@ -136,6 +153,37 @@ class FederationSpec:
                 "participation/compression shape the Eq.-7b aggregation and "
                 "require topology='full_average' (local_only never "
                 "communicates)")
+        if self.engine == "async_buffered":
+            if self.population is not None:
+                raise ValueError(
+                    "engine='async_buffered' does not compose with "
+                    "population mode yet: in-flight slot state (pending "
+                    "rho, residual, dispatch versions) is per resident "
+                    "client, not per virtual id. Model fleet heterogeneity "
+                    "through the latency side instead "
+                    "(repro.asyncfl.HeteroLatency over a "
+                    "HeterogeneousCohort's availability rates)")
+            if self.topology != "full_average":
+                raise ValueError("engine='async_buffered' aggregates "
+                                 "arrivals into one global model and "
+                                 "requires topology='full_average'")
+            if self.buffer_size is None:
+                object.__setattr__(self, "buffer_size", self.n_clients)
+            if not 1 <= self.buffer_size <= self.n_clients:
+                raise ValueError(
+                    f"buffer_size must be in [1, {self.n_clients}] "
+                    f"(at most one in-flight upload per client slot), "
+                    f"got {self.buffer_size}")
+        else:
+            if self.buffer_size is not None:
+                raise ValueError("buffer_size only applies to "
+                                 "engine='async_buffered'")
+            if self.staleness_alpha != 0.0:
+                raise ValueError("staleness_alpha only applies to "
+                                 "engine='async_buffered'")
+        if self.staleness_alpha < 0.0:
+            raise ValueError(f"staleness_alpha must be >= 0, "
+                             f"got {self.staleness_alpha}")
         if self.cohort_size is not None and self.population is None:
             raise ValueError("cohort_size only makes sense with a "
                              "population (FederationSpec(population=M))")
@@ -209,6 +257,17 @@ class FederationSpec:
     def participation_fraction(self) -> float:
         """Realized q = participants / n_clients (drives amplification)."""
         return self.participants_per_round() / self.n_clients
+
+    # -- async views ---------------------------------------------------------
+    def is_async(self) -> bool:
+        """Buffered-async execution (repro.asyncfl drivers)."""
+        return self.engine == "async_buffered"
+
+    def resolved_buffer_size(self) -> int:
+        """B — arrivals aggregated per flush (n_clients unless set)."""
+        if self.buffer_size is not None:
+            return self.buffer_size
+        return self.n_clients
 
     # -- population views ----------------------------------------------------
     def is_population(self) -> bool:
@@ -330,4 +389,7 @@ class FederationSpec:
                 self.vmap_microbatches, self.grad_accumulate,
                 self.average_opt_state, self.topology, self.engine,
                 self.kernel_backend, self.has_pipeline(), self.compressor,
-                self.compression_ratio, self.compression_bits)
+                self.compression_ratio, self.compression_bits,
+                # async: B shapes the flush/dispatch blocks; staleness_alpha
+                # deliberately excluded (a runtime weight operand)
+                self.buffer_size)

@@ -1,0 +1,320 @@
+"""Buffered-async flush/dispatch executor (FedBuff-style, Nguyen et al.).
+
+One async *cycle* = one jitted XLA program that
+
+1. **flushes** the B popped arrivals into the global model — a
+   staleness-weighted masked mean of the arrivals' slot replicas (dense),
+   or of their compressed error-fed deltas (pipeline with compressor) —
+   and
+2. **dispatches** replacements for exactly those B slots from the new
+   global model: the same ``make_local_round`` per-client step the sync
+   engines vmap (so every kernel backend and compressor composes
+   unchanged), with updates *computed at dispatch*: the upload a slot
+   will contribute to some future flush is fixed the moment it starts
+   training, which is what lets the whole flush+dispatch pair fuse into
+   one program with donated slot storage.
+
+Numerical contract (the sync-equivalence identity gate): with
+``buffer_size == n_clients``, a zero-spread latency model, and
+``staleness_alpha == 0``, every flush pops ``idx == arange(C)`` with unit
+weights and each cycle's expressions degenerate **bit-for-bit** to the
+sync ``vmap`` engine's round (``core/fl.py`` + ``core/aggregation.py``):
+
+* weights enter only as ``m = w * mask`` (``1.0 * x`` is bitwise ``x``)
+  and as an anchor carry ``(sum(mask) - sum(m)) * anchor`` that is an
+  exact float zero when ``w == 1``;
+* the dense flush divides by ``sum(mask)`` exactly like
+  ``AggregationPipeline._masked_mean_bcast`` / ``jnp.mean`` over the
+  client axis;
+* integer optimizer leaves (step counters) follow the same comb rules as
+  the sync paths (``tree_mean_over_axis0(keep_dtype=True)`` outside a
+  pipeline, the masked-mean ``astype`` inside one);
+* the per-cycle PRNG schedule replicates ``run_round`` + ``round_step``:
+  ``key, sub = split(key)``, then ``split(sub, B)`` or the pipeline's
+  ``(mask_key, pipeline_round_keys)`` derivation over the B-block.
+
+Staleness (``w(s) = 1/(1+s)^alpha`` by default, pluggable at the runtime
+layer) mixes each stale arrival toward the *current* global model: the
+flush is ``[sum(w_i m_i x_i) + (sum(m) - sum(w m)) * global] / sum(m)``
+for dense updates, and a plain ``w``-scaled delta average for compressed
+updates (deltas are already anchored at the global model).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.spec import FederationSpec
+from repro.core.aggregation import (
+    flatten_tree,
+    participation_mask,
+    unflatten_like,
+)
+from repro.core.fl import make_grad_fn, make_local_round, pipeline_round_keys
+from repro.utils.tree import tree_broadcast_axis0
+
+
+def block_participants(spec: FederationSpec, block: int) -> int:
+    """Participants sampled for a dispatch block of ``block`` slots: the
+    spec's exact per-round count when the block is the full cohort (the
+    degenerate/identity case), else the participation fraction scaled to
+    the block (floored at one so every dispatch trains something)."""
+    if block == spec.n_clients:
+        return spec.participants_per_round()
+    return max(1, min(block, round(spec.participation_fraction() * block)))
+
+
+def _take0(tree, idx):
+    return jax.tree.map(lambda x: jnp.take(x, idx, axis=0), tree)
+
+
+def _scatter0(store, new, idx):
+    return jax.tree.map(lambda s, n: s.at[idx].set(n), store, new)
+
+
+class AsyncBufferedExecutor:
+    """Per-spec compiled flush/dispatch cycle (+ the generation-0 dispatch).
+
+    Three operand layouts exist (plain / pipeline-dense /
+    pipeline-compressed); :meth:`init_dispatch` and :meth:`cycle` hide the
+    layout behind keyword residual/sent operands. jit retraces per block
+    shape (B vs tail sizes), which is the intended shape-keyed cache.
+
+    Donation: ``cycle`` donates the global model/opt and every slot
+    storage (params, opt, metrics, and sent/residual when compressed) —
+    the runtime must continue from the returned
+    :class:`repro.asyncfl.runtime.AsyncState`, mirroring the sync
+    drivers' donation contract.
+    """
+
+    def __init__(self, spec: FederationSpec):
+        if not spec.is_async():
+            raise ValueError("AsyncBufferedExecutor needs "
+                             "engine='async_buffered', got "
+                             f"engine={spec.engine!r}")
+        self.spec = spec
+        cfg = spec.fl_config(vmap_clients=True)
+        self._avg_opt = cfg.average_opt_state
+        self._pipeline = spec.aggregation_pipeline()
+        self._compressor = (self._pipeline.compressor
+                            if self._pipeline is not None else None)
+        self._local_round = make_local_round(
+            make_grad_fn(spec.loss_fn, cfg), spec.optimizer, cfg.tau)
+        if self._compressor is not None:
+            donate = (0, 1, 2, 3, 4, 5, 6)
+        else:
+            donate = (0, 1, 2, 3, 4)
+        self._cycle = jax.jit(self._build_cycle(),
+                              donate_argnums=donate)
+        self._init = jax.jit(self._build_init())
+
+    # -- dispatch core (shared by init and cycle) ---------------------------
+
+    def _dispatch(self, global_p, global_o, slot_o_src, batch, sub, sigmas_b,
+                  residual_b):
+        """Train one block of ``b`` slots from ``global_p``: replicates the
+        sync round's key schedule and local rounds over the block, plus the
+        at-dispatch compression of the update the block will upload.
+
+        ``slot_o_src`` is the per-slot optimizer state the block resumes
+        from when the spec keeps optimizer state local
+        (``average_opt_state=False``); ignored (broadcast of ``global_o``)
+        otherwise. Returns ``(new_p, new_s, ms, sent_b, residual_b, mask)``
+        with ``sent_b``/``residual_b`` None for dense specs and ``mask``
+        the block's participation mask (all-ones without a pipeline).
+        """
+        b = jax.tree.leaves(batch)[0].shape[0]
+        if self._pipeline is not None:
+            sub, mask_key = jax.random.split(sub)
+            mask = participation_mask(mask_key, b,
+                                      block_participants(self.spec, b))
+            keys, agg_keys = pipeline_round_keys(sub, b)
+        else:
+            mask = jnp.ones((b,), jnp.float32)
+            keys = jax.random.split(sub, b)
+        base = tree_broadcast_axis0(global_p, b)
+        opt_in = (tree_broadcast_axis0(global_o, b) if self._avg_opt
+                  else slot_o_src)
+        new_p, new_s, ms = jax.vmap(self._local_round)(base, opt_in, batch,
+                                                       keys, sigmas_b)
+        sent_b = None
+        if self._compressor is not None:
+            flat_prev = jax.vmap(flatten_tree)(base)
+            flat_new = jax.vmap(flatten_tree)(new_p)
+            corrected = (flat_new - flat_prev) + residual_b
+            sent_b = jax.vmap(self._compressor)(corrected, agg_keys)
+            sel = mask[:, None]
+            residual_b = (sel * (corrected - sent_b)
+                          + (1.0 - sel) * residual_b)
+        if self._pipeline is not None and not self._avg_opt:
+            # non-participants of this dispatch did not really train: same
+            # masked mix as AggregationPipeline's average_opt_state=False
+            def _mask_leaf(new, old):
+                m = mask.reshape((-1,) + (1,) * (new.ndim - 1))
+                return (m * new.astype(jnp.float32)
+                        + (1.0 - m) * old.astype(jnp.float32)).astype(
+                            new.dtype)
+            new_s = jax.tree.map(_mask_leaf, new_s, opt_in)
+        return new_p, new_s, ms, sent_b, residual_b, mask
+
+    # -- generation-0 dispatch ---------------------------------------------
+
+    def _build_init(self):
+        def init_plain(global_p, global_o, batch, key, sigmas):
+            key, sub = jax.random.split(key)
+            new_p, new_s, ms, _, _, mask = self._dispatch(
+                global_p, global_o, tree_broadcast_axis0(
+                    global_o, self.spec.n_clients), batch, sub, sigmas, None)
+            return new_p, new_s, ms, key, mask
+
+        def init_compressed(global_p, global_o, residual, batch, key, sigmas):
+            key, sub = jax.random.split(key)
+            new_p, new_s, ms, sent, residual, mask = self._dispatch(
+                global_p, global_o, tree_broadcast_axis0(
+                    global_o, self.spec.n_clients), batch, sub, sigmas,
+                residual)
+            return new_p, new_s, ms, sent, residual, key, mask
+
+        return (init_compressed if self._compressor is not None
+                else init_plain)
+
+    def init_dispatch(self, global_p, global_o, batch, key, sigmas,
+                      residual=None):
+        """Dispatch generation 0 (every slot, from the initial model).
+
+        Returns a dict of the fresh slot storages + the advanced key and
+        the block's participation mask.
+        """
+        if self._compressor is not None:
+            p, s, ms, sent, res, key, mask = self._init(
+                global_p, global_o, residual, batch, key, sigmas)
+        else:
+            p, s, ms, key, mask = self._init(global_p, global_o, batch, key,
+                                             sigmas)
+            sent = res = None
+        return {"slot_params": p, "slot_opt": s, "slot_metrics": ms,
+                "sent": sent, "residual": res, "key": key, "mask": mask}
+
+    # -- the fused flush + dispatch cycle -----------------------------------
+
+    def _flush(self, global_p, global_o, slot_p, slot_o, slot_ms, sent, idx,
+               weights, arr_mask):
+        """Fold the popped arrivals into the global model (staleness- and
+        participation-weighted) and reduce their metrics. Returns
+        ``(new_global_p, new_global_o, record_metrics)``."""
+        m = weights * arr_mask
+        den_sel = jnp.sum(arr_mask)
+        den_w = jnp.sum(m)
+        in_pipeline = self._pipeline is not None
+
+        def _comb(new_b, anchor):
+            # int leaves: lockstep counters outside a pipeline take a
+            # replica (tree_mean_over_axis0 keep_dtype rule); inside one
+            # they ride the masked-mean astype like the sync pipeline
+            if (not in_pipeline
+                    and jnp.issubdtype(new_b.dtype, jnp.integer)):
+                return new_b[0]
+            mm = m.reshape((-1,) + (1,) * (new_b.ndim - 1))
+            s = jnp.sum(mm * new_b.astype(jnp.float32), axis=0)
+            carry = (den_sel - den_w) * anchor.astype(jnp.float32)
+            return ((s + carry) / den_sel).astype(new_b.dtype)
+
+        if self._compressor is not None:
+            sent_b = jnp.take(sent, idx, axis=0)
+            avg_delta = jnp.sum(m[:, None] * sent_b, axis=0) / den_sel
+            new_gp = unflatten_like(flatten_tree(global_p) + avg_delta,
+                                    global_p)
+        else:
+            new_gp = jax.tree.map(_comb, _take0(slot_p, idx), global_p)
+        if self._avg_opt:
+            new_go = jax.tree.map(_comb, _take0(slot_o, idx), global_o)
+        else:
+            new_go = global_o
+        rec_ms = jax.tree.map(lambda x: jnp.sum(arr_mask * x) / den_sel,
+                              _take0(slot_ms, idx))
+        return new_gp, new_go, rec_ms
+
+    def _build_cycle(self):
+        def cycle_plain(global_p, global_o, slot_p, slot_o, slot_ms, key,
+                        sigmas, idx, weights, arr_mask, batch):
+            new_gp, new_go, rec_ms = self._flush(
+                global_p, global_o, slot_p, slot_o, slot_ms, None, idx,
+                weights, arr_mask)
+            key, sub = jax.random.split(key)
+            new_p, new_s, ms_b, _, _, nmask = self._dispatch(
+                new_gp, new_go, _take0(slot_o, idx), batch, sub,
+                jnp.take(sigmas, idx), None)
+            slot_p = _scatter0(slot_p, new_p, idx)
+            slot_o = _scatter0(slot_o, new_s, idx)
+            slot_ms = _scatter0(slot_ms, ms_b, idx)
+            return (new_gp, new_go, slot_p, slot_o, slot_ms, key, nmask,
+                    rec_ms)
+
+        def cycle_compressed(global_p, global_o, slot_p, slot_o, slot_ms,
+                             sent, residual, key, sigmas, idx, weights,
+                             arr_mask, batch):
+            new_gp, new_go, rec_ms = self._flush(
+                global_p, global_o, slot_p, slot_o, slot_ms, sent, idx,
+                weights, arr_mask)
+            key, sub = jax.random.split(key)
+            new_p, new_s, ms_b, sent_b, res_b, nmask = self._dispatch(
+                new_gp, new_go, _take0(slot_o, idx), batch, sub,
+                jnp.take(sigmas, idx), jnp.take(residual, idx, axis=0))
+            slot_p = _scatter0(slot_p, new_p, idx)
+            slot_o = _scatter0(slot_o, new_s, idx)
+            slot_ms = _scatter0(slot_ms, ms_b, idx)
+            sent = sent.at[idx].set(sent_b)
+            residual = residual.at[idx].set(res_b)
+            return (new_gp, new_go, slot_p, slot_o, slot_ms, sent, residual,
+                    key, nmask, rec_ms)
+
+        return (cycle_compressed if self._compressor is not None
+                else cycle_plain)
+
+    def cycle(self, global_p, global_o, slot_p, slot_o, slot_ms, key, sigmas,
+              idx, weights, arr_mask, batch, sent=None, residual=None):
+        """One fused flush+dispatch over the popped arrival block ``idx``.
+
+        ``weights``/``arr_mask`` are the block's staleness weights and its
+        dispatch-time participation mask ((B,) f32, host-computed);
+        ``batch`` is the replacement dispatch's (B, tau, ...) round batch.
+        Returns a dict with the new globals, updated slot storages, the
+        advanced key, the NEW dispatch's participation mask (the one
+        host sync of a cycle, fetched by the runtime for the ledger), and
+        the flushed arrivals' reduced metrics.
+        """
+        if self._compressor is not None:
+            (gp, go, sp, so, sm, sent, residual, key, nmask,
+             rec_ms) = self._cycle(global_p, global_o, slot_p, slot_o,
+                                   slot_ms, sent, residual, key, sigmas, idx,
+                                   weights, arr_mask, batch)
+        else:
+            gp, go, sp, so, sm, key, nmask, rec_ms = self._cycle(
+                global_p, global_o, slot_p, slot_o, slot_ms, key, sigmas,
+                idx, weights, arr_mask, batch)
+        return {"global_params": gp, "global_opt": go, "slot_params": sp,
+                "slot_opt": so, "slot_metrics": sm, "sent": sent,
+                "residual": residual, "key": key, "mask": nmask,
+                "metrics": rec_ms}
+
+
+# per-spec executor cache (mirrors engines._ROUND_FN_CACHE: bounded LRU —
+# executors hold XLA executables). Keyed like the chunked cache: the
+# participation count is baked into the traced dispatch.
+_EXECUTOR_CACHE: dict[tuple, AsyncBufferedExecutor] = {}
+_EXECUTOR_CACHE_MAX = 16
+
+
+def executor_for(spec: FederationSpec) -> AsyncBufferedExecutor:
+    """The cached :class:`AsyncBufferedExecutor` for ``spec`` (per engine
+    key + participant count, LRU-bounded)."""
+    key = (spec.engine_key(), spec.participants_per_round())
+    ex = _EXECUTOR_CACHE.pop(key, None)
+    if ex is None:
+        ex = AsyncBufferedExecutor(spec)
+        while len(_EXECUTOR_CACHE) >= _EXECUTOR_CACHE_MAX:
+            _EXECUTOR_CACHE.pop(next(iter(_EXECUTOR_CACHE)))
+    _EXECUTOR_CACHE[key] = ex
+    return ex

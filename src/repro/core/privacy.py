@@ -164,6 +164,12 @@ class PrivacyAccountant:
     batch_sizes: dict[int, int] = field(default_factory=dict)   # client -> X_m
     sigmas: dict[int, float] = field(default_factory=dict)      # client -> sigma_m
     _rho: dict[int, float] = field(default_factory=dict)
+    # dispatch/arrival split (buffered-async federation): the slice of _rho
+    # that was charged at dispatch time for uploads still in flight. _rho
+    # ALWAYS includes it — peek_epsilon/max_epsilon therefore probe the
+    # dispatched view, so a straggler's pending charge can never outrun the
+    # budget check; landed_rho() subtracts it for the arrived-only view.
+    _pending: dict[int, float] = field(default_factory=dict)
     steps: int = 0
 
     def register_client(self, client: int, batch_size: int, sigma: float) -> None:
@@ -243,6 +249,49 @@ class PrivacyAccountant:
             self._rho[m] = float(rho[i])
         self.steps += sum(taus)
         return worst
+
+    def charge_at_dispatch(self, n_steps: int, clients, q: float = 1.0,
+                           ) -> None:
+        """Pre-charge ``clients`` the full Lemma-2 cost of ``n_steps`` local
+        iterations at DISPATCH time (buffered-async federation).
+
+        Async semantics: a client's DP releases are determined the moment
+        it is handed a model version and starts its tau noisy steps — the
+        noise it will add is already fixed, regardless of when (or whether)
+        its upload lands in a buffer. Charging at dispatch keeps the ledger
+        sound against stragglers: ``_rho`` (hence ``peek_epsilon`` /
+        ``max_epsilon``) includes the in-flight charge immediately, so the
+        budget probe can never be outrun by an upload that is still in the
+        air. The per-step expression is identical to :meth:`step`'s
+        (``n_steps * subsampled_rho(rho_step, q)``). :meth:`note_arrival`
+        moves the charge from pending to landed when the upload arrives —
+        total rho is unchanged by arrival."""
+        if n_steps < 0:
+            raise ValueError("n_steps must be >= 0")
+        for m in clients:
+            m = int(m)
+            sens = grad_sensitivity(self.clip_norm, self.batch_sizes[m])
+            inc = n_steps * subsampled_rho(
+                gaussian_zcdp(sens, self.sigmas[m]), q)
+            self._rho[m] += inc
+            self._pending[m] = self._pending.get(m, 0.0) + inc
+        self.steps += n_steps
+
+    def note_arrival(self, clients) -> None:
+        """Mark ``clients``' in-flight uploads as landed: their pending
+        charge (already in ``_rho`` since dispatch) becomes landed rho.
+        Total rho is unchanged — arrival is bookkeeping, not a release."""
+        for m in clients:
+            self._pending.pop(int(m), None)
+
+    def pending_rho(self, client: int) -> float:
+        """The dispatch-time pre-charge of ``client``'s in-flight upload
+        (0.0 when nothing is in flight)."""
+        return self._pending.get(client, 0.0)
+
+    def landed_rho(self, client: int) -> float:
+        """rho from arrived uploads only (total minus in-flight)."""
+        return self._rho.get(client, 0.0) - self.pending_rho(client)
 
     def rho(self, client: int) -> float:
         return self._rho.get(client, 0.0)

@@ -33,18 +33,25 @@ def load_federated_params(model: Transformer, directory: str):
     checkpoints from any optimizer and any compressor serve alike at
     params-sized memory. The client axis collapses exactly as
     ``repro.api.eval_params``: any replica under ``full_average``, the
-    cross-client mean under ``local_only``.
+    cross-client mean under ``local_only``. Buffered-async checkpoints
+    (``repro.asyncfl.save_async_state``) store the already-collapsed
+    server model under ``global_params`` — serve that, never the K
+    in-flight slot storages their ``params`` leaves hold.
     """
     from repro.api import collapse_clients
-    from repro.checkpoint import load_checkpoint
+    from repro.checkpoint import checkpoint_leaf_paths, load_checkpoint
 
     with open(os.path.join(directory, "meta.json")) as f:
         meta = json.load(f)["extra"]
     # path donor only: load_checkpoint matches leaves by path, so the
     # single-replica init supplies the params/<leaf> paths and the stored
     # (C, ...) arrays come back untouched
-    params_like = {"params": model.init(jax.random.PRNGKey(0))}
-    tree, _, _ = load_checkpoint(directory, like=params_like)
+    donor = model.init(jax.random.PRNGKey(0))
+    if any(p.split("/", 1)[0] == "global_params"
+           for p in checkpoint_leaf_paths(directory)):
+        tree, _, _ = load_checkpoint(directory, like={"global_params": donor})
+        return tree["global_params"]
+    tree, _, _ = load_checkpoint(directory, like={"params": donor})
     return collapse_clients(tree["params"],
                             meta.get("topology", "full_average"))
 
@@ -85,7 +92,15 @@ def main(argv=None):
     ap.add_argument("--fl-checkpoint", default=None,
                     help="serve the aggregated model of a repro.api "
                          "save_state checkpoint instead of random init")
+    ap.add_argument("--env-profile", default="none",
+                    help="re-exec under a tuned host environment "
+                         "(repro.launch.env: 'host' or 'cpu-mesh')")
+    ap.add_argument("--host-devices", type=int, default=1,
+                    help="XLA host-platform device count of the cpu-mesh "
+                         "env profile")
     args = ap.parse_args(argv)
+    from repro.launch.env import apply_env_profile
+    apply_env_profile(args.env_profile, host_devices=args.host_devices)
 
     cfg = get_arch(args.arch)
     if args.smoke:

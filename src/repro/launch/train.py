@@ -20,6 +20,20 @@ host-side ClientStore. M = 10^5..10^6 runs on a laptop:
 
     PYTHONPATH=src python -m repro.launch.train --arch gemma3-4b --smoke \
         --rounds 10 --population 100000 --cohort-size 8 --tau 5 --eps 10
+
+``--async-buffer B`` switches to buffered-async federation
+(repro.asyncfl, engine ``async_buffered``): the server aggregates the
+first B arrivals per flush on a simulated device clock
+(``--latency-profile {uniform,lognormal,hetero}``) with staleness-damped
+updates (``--staleness-alpha``) and dispatch-time privacy charging:
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma3-4b --smoke \
+        --rounds 10 --clients 8 --tau 5 --async-buffer 4 \
+        --latency-profile hetero
+
+``--env-profile {host,cpu-mesh}`` re-execs the launcher under the tuned
+host environment (tcmalloc, XLA host-platform flags — see
+``repro.launch.env``).
 """
 from __future__ import annotations
 
@@ -31,7 +45,15 @@ import jax
 import numpy as np
 
 from repro.api import FederationSpec, init_state, save_state, train
+from repro.asyncfl import (
+    LATENCY_PROFILES,
+    init_async_state,
+    latency_profile,
+    save_async_state,
+    train_async,
+)
 from repro.configs import get_arch, smoke_variant
+from repro.launch.env import ENV_PROFILES, apply_env_profile
 from repro.population import (
     HeterogeneousCohort,
     init_population_state,
@@ -53,7 +75,10 @@ def build_federation(cfg, n_clients: int, tau: int, batch_size: int,
                      engine: str = "auto", seed: int = 0,
                      participation: float = 1.0, compressor: str = "none",
                      compression_ratio: float = 0.1,
-                     compression_bits: int = 8, population: int = 0):
+                     compression_bits: int = 8, population: int = 0,
+                     buffer_size: int | None = None,
+                     staleness_alpha: float = 0.0, latency_model=None,
+                     rng=None):
     """Assemble the repro.api handles for a transformer federation.
 
     Returns ``(model, spec, state, sampler)`` — drive them with
@@ -66,6 +91,13 @@ def build_federation(cfg, n_clients: int, tau: int, batch_size: int,
     sampled cohort's batches are ever synthesized), and the returned
     ``state`` is a :class:`repro.population.PopulationState` to drive with
     ``train_population`` (wrap the sampler via ``population_from_sampler``).
+
+    ``engine="async_buffered"`` returns an
+    :class:`repro.asyncfl.AsyncState` (generation 0 already dispatched —
+    it consumes the first round batches from ``rng``, so pass the SAME
+    ``rng`` to ``train_async``) to drive with ``train_async``;
+    ``buffer_size``/``staleness_alpha``/``latency_model`` configure the
+    flush and the simulated clocks.
     """
     model = Transformer(cfg)
     task = TokenTaskConfig(vocab=cfg.vocab, seq_len=seq_len,
@@ -83,10 +115,16 @@ def build_federation(cfg, n_clients: int, tau: int, batch_size: int,
         compression_bits=compression_bits,
         population=population or None,
         cohort_size=n_clients if population else None,
+        buffer_size=buffer_size if engine == "async_buffered" else None,
+        staleness_alpha=(staleness_alpha if engine == "async_buffered"
+                         else 0.0),
         sigmas=tuple(float(s) for s in np.asarray(sigmas)),
         batch_sizes=(batch_size,) * n_clients, delta=delta, seed=seed)
     if population:
         state = init_population_state(spec, params0)
+    elif spec.is_async():
+        state = init_async_state(spec, params0, stream.sampler, rng=rng,
+                                 latency_model=latency_model)
     else:
         state = init_state(spec, params0)
     return model, spec, state, stream.sampler
@@ -123,7 +161,30 @@ def main(argv=None):
     ap.add_argument("--c1", type=float, default=100.0)
     ap.add_argument("--c2", type=float, default=1.0)
     ap.add_argument("--engine", default="auto",
-                    choices=("vmap", "map", "shard_map", "auto"))
+                    choices=("vmap", "map", "shard_map", "async_buffered",
+                             "auto"))
+    ap.add_argument("--async-buffer", type=int, default=0,
+                    help="B > 0 switches to buffered-async federation "
+                         "(repro.asyncfl): aggregate the first B arrivals "
+                         "per flush on simulated device clocks, redispatch "
+                         "immediately, pre-charge privacy at dispatch")
+    ap.add_argument("--latency-profile", default="uniform",
+                    choices=LATENCY_PROFILES,
+                    help="simulated per-device latency distribution (async "
+                         "mode); 'hetero' couples slowness to the "
+                         "Beta-availability cohort model")
+    ap.add_argument("--latency-scale", type=float, default=1.0,
+                    help="nominal simulated seconds per dispatch")
+    ap.add_argument("--staleness-alpha", type=float, default=0.0,
+                    help="staleness damping w(s) = 1/(1+s)^alpha applied "
+                         "to late arrivals at the flush")
+    ap.add_argument("--env-profile", default="none", choices=ENV_PROFILES,
+                    help="re-exec under a tuned host environment "
+                         "(tcmalloc preload, XLA host flags — see "
+                         "repro.launch.env)")
+    ap.add_argument("--host-devices", type=int, default=1,
+                    help="XLA host-platform device count of the cpu-mesh "
+                         "env profile")
     ap.add_argument("--chunk-rounds", type=int, default=1,
                     help="fuse this many rounds into one jitted lax.scan "
                          "dispatch (repro.api.run_rounds): >1 makes the hot "
@@ -152,10 +213,20 @@ def main(argv=None):
     ap.add_argument("--compress-bits", type=int, default=8)
     ap.add_argument("--save", default=None)
     args = ap.parse_args(argv)
+    apply_env_profile(args.env_profile, host_devices=args.host_devices)
 
     cfg = get_arch(args.arch)
     if args.smoke:
         cfg = smoke_variant(cfg)
+
+    engine = args.engine
+    if args.async_buffer > 0 and engine != "async_buffered":
+        engine = "async_buffered"
+    is_async = engine == "async_buffered"
+    if is_async and args.population:
+        raise SystemExit("--async-buffer and --population are mutually "
+                         "exclusive (async fleets model heterogeneity via "
+                         "--latency-profile hetero)")
 
     # in population mode the resident block is the cohort, not --clients
     n_resident = (args.cohort_size or args.clients if args.population
@@ -181,16 +252,28 @@ def main(argv=None):
         print(f"[design] K*={sol.k} tau*={tau} sigma*={sigmas[0]:.4f} "
               f"bound={sol.predicted_bound:.4f} cost={sol.cost:.0f}")
 
+    latency_model = (latency_profile(args.latency_profile, seed=0,
+                                     fleet=n_resident,
+                                     scale=args.latency_scale)
+                     if is_async else None)
+    rng = np.random.default_rng(0)
     model, spec, state, sampler = build_federation(
         cfg, n_resident, tau, args.batch, args.seq, sigmas, lr=args.lr,
-        clip_norm=args.clip, delta=args.delta, engine=args.engine,
+        clip_norm=args.clip, delta=args.delta, engine=engine,
         participation=args.participation, compressor=args.compressor,
         compression_ratio=args.compress_ratio,
-        compression_bits=args.compress_bits, population=args.population)
+        compression_bits=args.compress_bits, population=args.population,
+        buffer_size=args.async_buffer or None,
+        staleness_alpha=args.staleness_alpha,
+        latency_model=latency_model, rng=rng)
     spec = spec.replace(eps_th=args.eps, c_th=args.cth,
                         c1=args.c1, c2=args.c2)
     t0 = time.time()
-    if args.population:
+    if is_async:
+        state, out = train_async(spec, state, sampler, max_rounds=args.rounds,
+                                 rng=rng, chunk_rounds=args.chunk_rounds,
+                                 latency_model=latency_model)
+    elif args.population:
         pop = population_from_sampler(args.population, sampler,
                                       name="federated-tokens")
         cohort_sampler = (HeterogeneousCohort(seed=spec.seed,
@@ -212,6 +295,13 @@ def main(argv=None):
         "resource_spent": out["resource_spent"],
         "wall_s": round(dt, 1),
     }
+    if is_async:
+        summary.update({
+            "buffer_size": spec.resolved_buffer_size(),
+            "latency_profile": args.latency_profile,
+            "staleness_alpha": args.staleness_alpha,
+            "sim_seconds": out["sim_seconds"],
+        })
     if args.population:
         summary.update({
             "population": args.population, "cohort_size": n_resident,
@@ -225,7 +315,9 @@ def main(argv=None):
     print(json.dumps(summary, indent=2))
     if args.save:
         extra = {"history": out["history"], **federation_meta(spec)}
-        if args.population:
+        if is_async:
+            save_async_state(args.save, state, extra=extra)
+        elif args.population:
             save_population_state(args.save, state, extra=extra)
         else:
             save_state(args.save, state, extra=extra)

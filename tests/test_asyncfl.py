@@ -1,0 +1,569 @@
+"""Buffered-async federation tests (repro.asyncfl).
+
+The two load-bearing pins:
+
+* **Sync-equivalence identity gate** — with ``buffer_size == n_clients``,
+  a zero-spread latency model and ``staleness_alpha=0``, the async engine
+  must be bit-for-bit the sync vmap engine on global params, optimizer
+  state, the rho ledger and resource_spent, across dense / partial
+  participation / top-k / QSGD specs.
+* **Dispatch-ledger soundness** — the dispatched privacy view
+  (``fl.rho + pending_rho``) equals the hand-computed Lemma-2 composition
+  of every dispatch ever issued, and therefore can never under-count while
+  uploads are still in flight.
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import FederationSpec, init_state, run_round
+from repro.api.state import round_batch, round_rho_charges
+from repro.asyncfl import (
+    AsyncState,
+    EventView,
+    HeteroLatency,
+    LognormalLatency,
+    UniformLatency,
+    async_accountant_view,
+    async_eval_params,
+    async_flush_cost,
+    dispatched_epsilon,
+    dispatched_rho,
+    earliest_arrivals,
+    exceeds_async_budgets,
+    flushes_within_budgets,
+    init_async_state,
+    latency_profile,
+    load_async_state,
+    polynomial_staleness,
+    run_async_cycle,
+    save_async_state,
+    sync_round_duration,
+    train_async,
+)
+from repro.core.privacy import (
+    PrivacyAccountant,
+    gaussian_zcdp,
+    grad_sensitivity,
+    zcdp_to_dp,
+)
+from repro.models.linear import init_linear, logreg_loss
+from repro.optim import sgd
+
+C, TAU, DIM, B = 4, 3, 8, 4
+
+# every dispatch takes exactly 1.1 simulated seconds: the degenerate clock
+# of the identity gate (all C uploads arrive together, the flush is a
+# barrier)
+FLAT_CLOCK = UniformLatency(0, compute=(1.0, 1.0), upload=(0.1, 0.1))
+
+
+def _spec(engine="async_buffered", **kw):
+    base = dict(n_clients=C, tau=TAU, loss_fn=logreg_loss, optimizer=sgd(0.2),
+                clip_norm=1.0, dp=True, sigmas=(0.5,) * C,
+                batch_sizes=(B,) * C, engine=engine)
+    base.update(kw)
+    return FederationSpec(**base)
+
+
+def _sampler(m, tau, rng):
+    return {"x": rng.normal(size=(tau, B, DIM)).astype(np.float32),
+            "y": rng.integers(0, 2, size=(tau, B)).astype(np.int32)}
+
+
+def _fixed_sampler(m, tau, rng):
+    """rng-free sampler (pure in the client id): resume tests replay the
+    exact data stream without checkpointing a numpy Generator."""
+    r = np.random.default_rng((7, int(m)))
+    return {"x": r.normal(size=(tau, B, DIM)).astype(np.float32),
+            "y": r.integers(0, 2, size=(tau, B)).astype(np.int32)}
+
+
+def _leaves_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# the identity gate: degenerate async == sync vmap, bit for bit
+# ---------------------------------------------------------------------------
+
+GATE_SETTINGS = [
+    ("dense", dict()),
+    ("q50", dict(participation=0.5)),
+    ("topk25", dict(compressor="topk", compression_ratio=0.25)),
+    ("qsgd4", dict(compressor="qsgd", compression_bits=4)),
+]
+
+
+@pytest.mark.parametrize("name,extra", GATE_SETTINGS,
+                         ids=[n for n, _ in GATE_SETTINGS])
+def test_sync_identity_gate(name, extra):
+    """B == C + zero latency spread + alpha=0 reduces the buffered-async
+    engine to the sync barrier: global params, optimizer state, the rho
+    ledger and resource_spent match ``run_round`` bit for bit, round for
+    round, under dense, partial-participation and compressed specs."""
+    ss = _spec("vmap", **extra)
+    sa = _spec("async_buffered", **extra)
+    rng_s, rng_a = np.random.default_rng(0), np.random.default_rng(0)
+    st_s = init_state(ss, init_linear(DIM))
+    st_a = init_async_state(sa, init_linear(DIM), _sampler, rng=rng_a,
+                            latency_model=FLAT_CLOCK)
+    for r in range(4):
+        st_s, _ = run_round(ss, st_s, round_batch(ss, _sampler, rng_s),
+                            check_budgets=False)
+        st_a, rec = run_async_cycle(sa, st_a, _sampler, rng_a,
+                                    latency_model=FLAT_CLOCK,
+                                    check_budgets=False)
+        _leaves_equal(jax.tree.map(lambda x: x[0], st_s.params),
+                      st_a.global_params)
+        _leaves_equal(jax.tree.map(lambda x: x[0], st_s.opt_state),
+                      st_a.global_opt)
+        np.testing.assert_array_equal(st_s.rho, st_a.fl.rho)
+        assert st_s.resource_spent == st_a.fl.resource_spent
+        assert rec["staleness_max"] == 0.0
+
+
+def test_degenerate_matches_train_eval_model():
+    """async_eval_params serves the global model (already collapsed)."""
+    spec = _spec()
+    st = init_async_state(spec, init_linear(DIM), _sampler,
+                          rng=np.random.default_rng(0),
+                          latency_model=FLAT_CLOCK)
+    _leaves_equal(async_eval_params(spec, st), st.global_params)
+
+
+# ---------------------------------------------------------------------------
+# dispatch-ledger soundness (the staleness-aware accounting pin)
+# ---------------------------------------------------------------------------
+
+def test_dispatch_ledger_soundness():
+    """The dispatched view equals the hand-computed Lemma-2 composition of
+    every dispatch ever issued — computed independently of the runtime from
+    first principles (tau * gaussian_zcdp(sens_m, sigma_m) per dispatch) —
+    and the landed ledger lags it by exactly the in-flight uploads. A
+    budget probe reading the dispatched view therefore can never be
+    under-counted by a straggler."""
+    spec = _spec(buffer_size=2, eps_th=1e9, c_th=1e9)
+    lat = LognormalLatency(3, median=1.0, sigma=0.9)
+    rng = np.random.default_rng(0)
+    st = init_async_state(spec, init_linear(DIM), _sampler, rng=rng,
+                          latency_model=lat)
+    # hand Lemma-2: per-dispatch rho of client m, from the paper's
+    # formulas only (never round_rho_charges)
+    per_dispatch = np.asarray(
+        [TAU * gaussian_zcdp(grad_sensitivity(spec.clip_norm, B), 0.5)
+         for _ in range(C)], np.float64)
+    dispatches = np.ones(C)            # generation 0 dispatched everyone
+    arrived = np.zeros(C)
+    for _ in range(6):
+        np.testing.assert_allclose(dispatched_rho(st),
+                                   dispatches * per_dispatch, rtol=1e-12)
+        np.testing.assert_allclose(st.fl.rho, arrived * per_dispatch,
+                                   rtol=1e-12)
+        # soundness: dispatched >= landed, gap is exactly the in-flight set
+        assert np.all(st.pending_rho >= 0.0)
+        assert np.all(dispatched_rho(st) >= st.fl.rho)
+        in_flight = dispatches - arrived
+        np.testing.assert_allclose(st.pending_rho,
+                                   in_flight * per_dispatch, rtol=1e-12)
+        view = EventView(st.arrival_time, st.slot_seq, st.next_seq, st.clock)
+        idx, _, _, _ = view.copy().pop(2, lat)
+        st, _ = run_async_cycle(spec, st, _sampler, rng, latency_model=lat,
+                                check_budgets=False)
+        arrived[idx] += 1
+        dispatches[idx] += 1
+    # the accountant view restores the same split
+    acc = async_accountant_view(spec, st)
+    for m in range(C):
+        assert acc.rho(m) == pytest.approx(float(dispatched_rho(st)[m]))
+        assert acc.pending_rho(m) == pytest.approx(float(st.pending_rho[m]))
+        assert acc.landed_rho(m) == pytest.approx(float(st.fl.rho[m]))
+
+
+def test_accountant_charge_at_dispatch():
+    """PrivacyAccountant dispatch/arrival split: pre-charge shows up in rho
+    immediately, arrival moves pending to landed without changing totals."""
+    acc = PrivacyAccountant(clip_norm=1.0, delta=1e-5)
+    acc.register_client(0, 16, 0.7)
+    inc = TAU * gaussian_zcdp(grad_sensitivity(1.0, 16), 0.7)
+    acc.charge_at_dispatch(TAU, [0])
+    assert acc.rho(0) == pytest.approx(inc)
+    assert acc.pending_rho(0) == pytest.approx(inc)
+    assert acc.landed_rho(0) == pytest.approx(0.0)
+    eps_before = acc.epsilon(0)
+    acc.note_arrival([0])
+    assert acc.rho(0) == pytest.approx(inc)          # totals unchanged
+    assert acc.pending_rho(0) == 0.0
+    assert acc.landed_rho(0) == pytest.approx(inc)
+    assert acc.epsilon(0) == eps_before
+    with pytest.raises(ValueError):
+        acc.charge_at_dispatch(-1, [0])
+
+
+def test_budget_probe_counts_in_flight():
+    """The privacy probe trips on dispatched (not landed) rho: a state
+    whose pending charges already exhaust the budget refuses the next
+    flush even though nothing has landed."""
+    spec = _spec(buffer_size=2, eps_th=1e9, c_th=1e9)
+    st = init_async_state(spec, init_linear(DIM), _sampler,
+                          rng=np.random.default_rng(0),
+                          latency_model=FLAT_CLOCK)
+    assert float(np.max(st.fl.rho)) == 0.0          # nothing landed
+    eps_now = dispatched_epsilon(spec, st)
+    assert eps_now > 0.0
+    tight = _spec(buffer_size=2, eps_th=eps_now * 1.0001, c_th=1e9)
+    assert exceeds_async_budgets(tight, st) == "privacy"
+    n, why = flushes_within_budgets(tight, st, 10)
+    assert (n, why) == (0, "privacy")
+    with pytest.raises(Exception):
+        run_async_cycle(tight, st, _sampler, np.random.default_rng(1),
+                        latency_model=FLAT_CLOCK)
+
+
+def test_flush_cost_degenerates_to_round_cost():
+    spec = _spec()
+    assert async_flush_cost(spec, C, spec.participants_per_round()) == \
+        spec.round_cost()
+    half = _spec(buffer_size=2)
+    assert async_flush_cost(half, 2, 2) < half.round_cost()
+
+
+# ---------------------------------------------------------------------------
+# clocks: determinism, hetero composition, event loop
+# ---------------------------------------------------------------------------
+
+def test_latency_determinism():
+    """Draws depend only on (seed, vid, seq): fresh instances replay the
+    stream, different seqs re-randomize, zero spread is exact."""
+    vids, seqs = np.arange(6), np.arange(6) + 10
+    a = UniformLatency(5)(vids, seqs)
+    b = UniformLatency(5)(vids, seqs)
+    np.testing.assert_array_equal(a, b)
+    c = UniformLatency(5)(vids, seqs + 1)
+    assert not np.array_equal(a, c)
+    flat = FLAT_CLOCK(vids, seqs)
+    np.testing.assert_allclose(flat, np.full(6, 1.1), rtol=1e-12)
+    log = LognormalLatency(5)(vids, seqs)
+    np.testing.assert_array_equal(log, LognormalLatency(5)(vids, seqs))
+    assert np.all(log > 0)
+
+
+def test_latency_profile_factory():
+    assert isinstance(latency_profile("uniform", seed=1), UniformLatency)
+    assert isinstance(latency_profile("lognormal", scale=2.0),
+                      LognormalLatency)
+    h = latency_profile("hetero", fleet=8, scale=0.5)
+    assert isinstance(h, HeteroLatency) and h.fleet == 8
+    with pytest.raises(ValueError):
+        latency_profile("nope")
+
+
+def test_hetero_cohort_latency_composition():
+    """The pinned composition: HeteroLatency shares HeterogeneousCohort's
+    availability rates, so high-unreliability vids have strictly higher
+    mean simulated latency AND land strictly fewer buffer arrivals."""
+    from repro.population.samplers import HeterogeneousCohort
+    k = 16
+    cohort = HeterogeneousCohort(seed=11, availability=(2.0, 2.0))
+    lat = HeteroLatency(11, fleet=k, cohort=cohort, jitter=0.1)
+    rates = lat.rates()
+    np.testing.assert_array_equal(rates, cohort.rates(k))
+    flaky = np.argsort(rates)[: k // 4]         # least available quartile
+    solid = np.argsort(rates)[-k // 4:]
+    assert float(lat.mean_latency(flaky).mean()) > \
+        float(lat.mean_latency(solid).mean())
+    # strict monotonicity vid-by-vid: lower rate -> higher mean
+    order = np.argsort(rates)
+    means = lat.mean_latency(order)
+    assert np.all(np.diff(means) <= 0)
+    assert means[0] > means[-1]
+    # arrival rates: drive the pure event loop (no training needed) and
+    # count how often each slot makes a B-of-K buffer
+    view = EventView(lat(np.arange(k), np.arange(k)),
+                     np.arange(k), k, 0.0)
+    arrivals = np.zeros(k, np.int64)
+    for _ in range(200):
+        idx, _, _, _ = view.pop(4, lat)
+        arrivals[idx] += 1
+    assert arrivals[flaky].mean() < arrivals[solid].mean()
+    assert arrivals[flaky].max() < arrivals[solid].min()
+
+
+def test_event_view_pop_semantics():
+    at = np.asarray([3.0, 1.0, 2.0, 1.0])
+    seq = np.asarray([0, 3, 2, 1])
+    # tie at t=1.0 broken by seq: slot 3 (seq 1) before slot 1 (seq 3)
+    np.testing.assert_array_equal(earliest_arrivals(at, seq, 3), [3, 1, 2])
+    view = EventView(at, seq, next_seq=4, clock=0.0)
+    twin = view.copy()
+    idx, t, new_seqs, latency = view.pop(2, FLAT_CLOCK)
+    np.testing.assert_array_equal(idx, [3, 1])
+    assert t == 1.0 and view.clock == 1.0
+    np.testing.assert_array_equal(new_seqs, [4, 5])
+    # replacement arrivals rescheduled from the flush time
+    np.testing.assert_allclose(view.arrival_time[[3, 1]], t + latency)
+    # the copy was untouched
+    assert twin.clock == 0.0 and twin.next_seq == 4
+    with pytest.raises(ValueError):
+        view.pop(5, FLAT_CLOCK)
+
+
+def test_polynomial_staleness():
+    s = np.asarray([0, 1, 3])
+    np.testing.assert_array_equal(polynomial_staleness(0.0)(s),
+                                  np.ones(3, np.float32))
+    w = polynomial_staleness(1.0)(s)
+    np.testing.assert_allclose(w, [1.0, 0.5, 0.25], rtol=1e-6)
+
+
+def test_staleness_observed_with_small_buffer():
+    """B < C leaves slow slots training on old versions: the cycle record
+    reports nonzero staleness once versions diverge, and alpha > 0 changes
+    the aggregate (weights actually applied)."""
+    spec = _spec(buffer_size=1, eps_th=1e9, c_th=1e9)
+    lat = LognormalLatency(1, sigma=1.0)
+    rng = np.random.default_rng(0)
+    st = init_async_state(spec, init_linear(DIM), _sampler, rng=rng,
+                          latency_model=lat)
+    seen = 0.0
+    for _ in range(6):
+        st, rec = run_async_cycle(spec, st, _sampler, rng,
+                                  latency_model=lat, check_budgets=False)
+        seen = max(seen, rec["staleness_max"])
+    assert seen > 0.0
+
+    def run(alpha):
+        sp = _spec(buffer_size=1, staleness_alpha=alpha, eps_th=1e9,
+                   c_th=1e9)
+        r = np.random.default_rng(0)
+        s = init_async_state(sp, init_linear(DIM), _sampler, rng=r,
+                             latency_model=lat)
+        for _ in range(6):
+            s, _ = run_async_cycle(sp, s, _sampler, r, latency_model=lat,
+                                   check_budgets=False)
+        return np.concatenate([np.asarray(x).ravel()
+                               for x in jax.tree.leaves(s.global_params)])
+
+    assert not np.array_equal(run(0.0), run(2.0))
+
+
+# ---------------------------------------------------------------------------
+# driver: budgets, chunking, resume
+# ---------------------------------------------------------------------------
+
+def test_train_async_budget_stop():
+    spec = _spec(buffer_size=2, eps_th=25.0, c_th=1e9, delta=1e-5)
+    rng = np.random.default_rng(0)
+    st = init_async_state(spec, init_linear(DIM), _sampler, rng=rng,
+                          latency_model=FLAT_CLOCK)
+    st, out = train_async(spec, st, _sampler, max_rounds=10_000, rng=rng,
+                          latency_model=FLAT_CLOCK)
+    assert 0 < out["rounds"] < 10_000
+    assert exceeds_async_budgets(spec, st) is not None
+    # never exceeded: even the conservative dispatched view stayed inside
+    assert dispatched_epsilon(spec, st) <= spec.eps_th
+    assert out["sim_seconds"] > 0.0
+
+
+def test_train_async_chunked_equals_per_cycle():
+    """chunk_rounds > 1 (pre-projected schedule + device_put batches) is
+    bit-for-bit the per-cycle driver."""
+    lat = LognormalLatency(2, sigma=0.8)
+
+    def run(chunk):
+        spec = _spec(buffer_size=2, eps_th=1e9, c_th=1e9,
+                     compressor="topk", compression_ratio=0.25)
+        rng = np.random.default_rng(0)
+        st = init_async_state(spec, init_linear(DIM), _sampler, rng=rng,
+                              latency_model=lat)
+        st, out = train_async(spec, st, _sampler, max_rounds=6, rng=rng,
+                              chunk_rounds=chunk, latency_model=lat)
+        return st, out
+
+    s1, o1 = run(1)
+    s3, o3 = run(3)
+    assert o1["rounds"] == o3["rounds"] == 6
+    _leaves_equal(s1.global_params, s3.global_params)
+    np.testing.assert_array_equal(s1.fl.rho, s3.fl.rho)
+    np.testing.assert_array_equal(s1.arrival_time, s3.arrival_time)
+    assert s1.clock == s3.clock
+
+
+def test_save_load_resume_identity(tmp_path):
+    """Checkpoint mid-run, restore, continue: identical to the
+    uninterrupted run (model, ledgers, schedule, clock)."""
+    lat = LognormalLatency(4, sigma=0.7)
+    spec = _spec(buffer_size=2, eps_th=1e9, c_th=1e9)
+    rng = np.random.default_rng(0)  # _fixed_sampler ignores it
+
+    def fresh():
+        return init_async_state(spec, init_linear(DIM), _fixed_sampler,
+                                rng=np.random.default_rng(0),
+                                latency_model=lat)
+
+    st_a = fresh()
+    for _ in range(4):
+        st_a, _ = run_async_cycle(spec, st_a, _fixed_sampler, rng,
+                                  latency_model=lat, check_budgets=False)
+    st_b = fresh()
+    for _ in range(2):
+        st_b, _ = run_async_cycle(spec, st_b, _fixed_sampler, rng,
+                                  latency_model=lat, check_budgets=False)
+    save_async_state(str(tmp_path / "ck"), st_b, extra={"tag": 7})
+    st_c, extra = load_async_state(str(tmp_path / "ck"), like=fresh())
+    assert extra["tag"] == 7
+    assert st_c.clock == st_b.clock and st_c.next_seq == st_b.next_seq
+    for _ in range(2):
+        st_c, _ = run_async_cycle(spec, st_c, _fixed_sampler, rng,
+                                  latency_model=lat, check_budgets=False)
+    _leaves_equal(st_a.global_params, st_c.global_params)
+    _leaves_equal(st_a.global_opt, st_c.global_opt)
+    np.testing.assert_array_equal(st_a.fl.rho, st_c.fl.rho)
+    np.testing.assert_array_equal(st_a.pending_rho, st_c.pending_rho)
+    np.testing.assert_array_equal(st_a.arrival_time, st_c.arrival_time)
+    np.testing.assert_array_equal(st_a.slot_version, st_c.slot_version)
+    assert st_a.clock == st_c.clock
+
+
+# ---------------------------------------------------------------------------
+# spec / engine seams
+# ---------------------------------------------------------------------------
+
+def test_spec_validation():
+    with pytest.raises(ValueError, match="buffer_size"):
+        _spec("vmap", buffer_size=2)
+    with pytest.raises(ValueError, match="staleness_alpha"):
+        _spec("vmap", staleness_alpha=0.5)
+    with pytest.raises(ValueError, match="buffer_size"):
+        _spec(buffer_size=C + 1)
+    with pytest.raises(ValueError, match="staleness_alpha"):
+        _spec(staleness_alpha=-1.0)
+    spec = _spec()                      # defaults to B == n_clients
+    assert spec.resolved_buffer_size() == C and spec.is_async()
+    assert not _spec("vmap").is_async()
+    # buffer size shapes the dispatched program: distinct executor keys
+    assert _spec(buffer_size=2).engine_key() != spec.engine_key()
+
+
+def test_sync_round_fns_refuse_async_specs():
+    from repro.api.engines import chunked_round_fn_for, round_fn_for
+    spec = _spec()
+    with pytest.raises(ValueError, match="async"):
+        round_fn_for(spec)
+    with pytest.raises(ValueError, match="async"):
+        chunked_round_fn_for(spec)
+    with pytest.raises(ValueError, match="async"):
+        init_async_state(_spec("vmap"), init_linear(DIM), _sampler)
+
+
+# ---------------------------------------------------------------------------
+# async-beats-sync on a heterogeneous fleet (simulated time)
+# ---------------------------------------------------------------------------
+
+def test_async_beats_sync_simulated_time():
+    """On a straggler fleet, processing the same number of client updates
+    takes strictly less simulated time buffered-async (B of K per flush)
+    than with a sync barrier (max over all K per round)."""
+    k, b, rounds = 8, 2, 10
+    lat = HeteroLatency(3, fleet=k, slow_factor=6.0)
+    sync_time = sum(sync_round_duration(lat, k, r) for r in range(rounds))
+    view = EventView(lat(np.arange(k), np.arange(k)), np.arange(k), k, 0.0)
+    flushes = rounds * k // b           # same update count as sync
+    for _ in range(flushes):
+        view.pop(b, lat)
+    assert view.clock < sync_time
+
+
+# ---------------------------------------------------------------------------
+# launch CLI + env profiles
+# ---------------------------------------------------------------------------
+
+def test_launch_train_async_cli(tmp_path, capsys):
+    from repro.launch.train import main
+    save = str(tmp_path / "ckpt")
+    rc = main(["--arch", "gemma3-4b", "--smoke", "--rounds", "2",
+               "--clients", "4", "--tau", "1", "--batch", "2", "--seq",
+               "16", "--async-buffer", "2", "--latency-profile", "hetero",
+               "--staleness-alpha", "0.5", "--eps", "1e9", "--cth", "1e9",
+               "--save", save])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert '"buffer_size": 2' in out and '"sim_seconds"' in out
+    assert os.path.exists(os.path.join(save, "meta.json"))
+
+
+def test_launch_train_async_population_rejected():
+    from repro.launch.train import main
+    with pytest.raises(SystemExit):
+        main(["--arch", "gemma3-4b", "--smoke", "--rounds", "1",
+              "--population", "100", "--cohort-size", "2",
+              "--async-buffer", "2"])
+
+
+def test_env_profiles():
+    from repro.launch.env import (
+        ENV_PROFILES,
+        _merge_xla_flags,
+        apply_env_profile,
+        profile_env,
+    )
+    assert profile_env("none") == {}
+    host = profile_env("host", base={})
+    assert host["TF_CPP_MIN_LOG_LEVEL"] == "4"
+    mesh = profile_env("cpu-mesh", host_devices=4,
+                       base={"XLA_FLAGS": "--xla_step_marker_location=0"})
+    # user flags win, profile flags append
+    assert "--xla_step_marker_location=0" in mesh["XLA_FLAGS"]
+    assert "--xla_step_marker_location=1" not in mesh["XLA_FLAGS"]
+    assert "--xla_force_host_platform_device_count=4" in mesh["XLA_FLAGS"]
+    assert _merge_xla_flags("", ["--a=1"]) == "--a=1"
+    with pytest.raises(ValueError):
+        profile_env("gpu-mesh")
+    with pytest.raises(ValueError):
+        profile_env("cpu-mesh", host_devices=0)
+    # apply is a no-op for "none" and for already-applied processes
+    assert apply_env_profile("none") is False
+    assert apply_env_profile(None) is False
+    os.environ["REPRO_ENV_PROFILE_APPLIED"] = "1"
+    try:
+        assert apply_env_profile("host") is False
+    finally:
+        del os.environ["REPRO_ENV_PROFILE_APPLIED"]
+    assert set(ENV_PROFILES) == {"none", "host", "cpu-mesh"}
+
+
+# ------------------- CI smoke leg (REPRO_SMOKE_ASYNC) -----------------------
+
+@pytest.mark.skipif(not os.environ.get("REPRO_SMOKE_ASYNC"),
+                    reason="set REPRO_SMOKE_ASYNC=1 to smoke buffered-async "
+                           "federation in this env")
+def test_env_async_smoke():
+    """CI's async leg: K=8 hetero straggler fleet, B=4 buffer, top-k
+    compressed uploads, staleness damping, chunked driver — trains, the
+    virtual clock advances monotonically, arrivals skew toward reliable
+    devices, and the dispatched ledger stays ahead of the landed one."""
+    k = 8
+    spec = FederationSpec(
+        n_clients=k, tau=TAU, loss_fn=logreg_loss, optimizer=sgd(0.2),
+        clip_norm=1.0, dp=True, sigmas=(0.5,) * k, batch_sizes=(B,) * k,
+        engine="async_buffered", buffer_size=4, staleness_alpha=0.5,
+        compressor="topk", compression_ratio=0.25, eps_th=1e9, c_th=1e9)
+    lat = HeteroLatency(0, fleet=k, slow_factor=6.0)
+    rng = np.random.default_rng(0)
+    st = init_async_state(spec, init_linear(DIM), _sampler, rng=rng,
+                          latency_model=lat)
+    st, out = train_async(spec, st, _sampler, max_rounds=8, rng=rng,
+                          chunk_rounds=4, latency_model=lat)
+    assert out["rounds"] == 8
+    assert np.isfinite(out["history"][-1]["loss"])
+    clocks = [r["sim_seconds"] for r in out["history"]]
+    assert all(b >= a for a, b in zip(clocks, clocks[1:]))
+    assert st.arrivals.sum() == 8 * 4
+    assert np.all(dispatched_rho(st) >= st.fl.rho)
+    assert zcdp_to_dp(float(np.max(dispatched_rho(st))),
+                      spec.delta) == out["max_epsilon"]
