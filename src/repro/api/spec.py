@@ -76,6 +76,39 @@ class FederationSpec:
     #   Accounting-only: not part of engine_key(), editable via replace()
     #   without recompiling.
 
+    # -- adversarial fleet (core/robust.py + core/secureagg.py) ------------
+    aggregator: str = "mean"        # "mean" | "median" | "trimmed_mean" |
+    #   "norm_bound": the Eq.-7b reduction over participant updates.
+    #   "mean" is the exact PR-3 pipeline; the robust choices bound the
+    #   pull of a byzantine minority (Yin et al. 2018). Part of
+    #   engine_key() — and with a robust aggregator the participant count
+    #   becomes static too (the row gather bakes P in), so participation
+    #   sweeps recompile there (unlike under "mean").
+    trim_fraction: float = 0.1      # per-end trim of "trimmed_mean", [0,.5)
+    norm_bound_factor: float = 3.0  # "norm_bound" rejects updates with
+    #   L2 norm > factor * median participant norm
+    secure_agg: bool = False        # pairwise-mask secure-aggregation
+    #   simulation (core/secureagg.py): updates are fixed-point encoded,
+    #   pairwise-masked, and only their modular SUM is ever materialized —
+    #   requires aggregator="mean" (the server cannot compute a median of
+    #   updates it never sees). Non-participants are the round's dropout
+    #   set; their pair masks are reconstructed and subtracted.
+    secure_frac_bits: int = 16      # fixed-point fractional bits (the one
+    #   lossy step: quantization to a 2^-frac_bits grid at encode time)
+    dp_accounting: str = "local"    # "local" | "central". "central" (needs
+    #   secure_agg) accounts against the aggregate-only observer: the
+    #   masked sum pools P participants' Gaussian noises, scaling the
+    #   per-step rho by 1/P (secureagg.central_rho_scale — see its
+    #   caveats). Accounting-only: NOT part of engine_key().
+    attack: str = "none"            # "none" | "sign_flip" | "scale":
+    #   byzantine upload corruption applied at the server boundary by a
+    #   static set of round(byzantine_fraction * C) clients drawn from
+    #   (seed, fraction) — resident federations only (the set binds to
+    #   stable client identities; data-level label_flip for populations
+    #   lives in repro.population.attacks.malicious_population).
+    byzantine_fraction: float = 0.0
+    attack_scale: float = 10.0      # multiplier of the "scale" attack
+
     # -- virtual client population (repro.population; cohort execution) ----
     population: int | None = None   # M virtual clients behind a lazy
     #   ClientPopulation; None -> the resident dense path. In population
@@ -148,11 +181,47 @@ class FederationSpec:
         elif not 0.0 < self.participation <= 1.0:
             raise ValueError(f"participation fraction must be in (0, 1], "
                              f"got {self.participation}")
+        from repro.core.robust import validate_aggregator, validate_attack
+        from repro.core.secureagg import validate_secure
+        validate_aggregator(self.aggregator, self.trim_fraction,
+                            self.norm_bound_factor)
+        validate_attack(self.attack, self.byzantine_fraction,
+                        self.attack_scale)
+        validate_secure(self.secure_frac_bits)
+        if self.secure_agg and self.aggregator != "mean":
+            raise ValueError(
+                f"secure_agg only composes with aggregator='mean': the "
+                f"server materializes nothing but the masked SUM, so it "
+                f"cannot compute a {self.aggregator!r} of updates it never "
+                f"sees")
+        if self.dp_accounting not in ("local", "central"):
+            raise ValueError(f"dp_accounting must be 'local' or 'central', "
+                             f"got {self.dp_accounting!r}")
+        if self.dp_accounting == "central" and not self.secure_agg:
+            raise ValueError(
+                "dp_accounting='central' accounts the aggregate-only "
+                "observer of the masked sum and therefore requires "
+                "secure_agg=True — without secure aggregation the server "
+                "sees individual updates and only the local ledger is "
+                "sound")
+        if self.attack != "none" and self.population is not None:
+            raise ValueError(
+                "update attacks (sign_flip/scale) bind a static byzantine "
+                "set to resident client identities; population cohort "
+                "slots host different virtual clients every round. Model "
+                "malicious populations at the data level instead "
+                "(repro.population.attacks.malicious_population)")
+        if self.is_adversarial() and self.engine == "async_buffered":
+            raise ValueError(
+                "engine='async_buffered' aggregates with its own "
+                "staleness-weighted flush and does not route through "
+                "AggregationPipeline.aggregate — robust aggregators, "
+                "secure_agg, and update attacks are sync-engine features")
         if self.has_pipeline() and self.topology != "full_average":
             raise ValueError(
-                "participation/compression shape the Eq.-7b aggregation and "
-                "require topology='full_average' (local_only never "
-                "communicates)")
+                "participation/compression/robust-secure aggregation shape "
+                "the Eq.-7b aggregation and require "
+                "topology='full_average' (local_only never communicates)")
         if self.engine == "async_buffered":
             if self.population is not None:
                 raise ValueError(
@@ -289,12 +358,21 @@ class FederationSpec:
         ``amplify_participation``, the composed probability that a given
         client realizes a step in a given round — cohort sampling (K/M)
         times within-cohort participation
-        (:func:`repro.core.privacy.composed_subsampling_q`)."""
-        if not self.amplify_participation:
-            return 1.0
-        from repro.core.privacy import composed_subsampling_q
-        return composed_subsampling_q(self.cohort_fraction(),
-                                      self.participation_fraction())
+        (:func:`repro.core.privacy.composed_subsampling_q`). Under
+        ``dp_accounting="central"`` (secure aggregation's aggregate-only
+        observer) the charge additionally scales by
+        :func:`repro.core.secureagg.central_rho_scale` — 1/P for the P
+        pooled participant noises; the factors compose multiplicatively
+        because subsampling and noise pooling amplify independently."""
+        q = 1.0
+        if self.amplify_participation:
+            from repro.core.privacy import composed_subsampling_q
+            q = composed_subsampling_q(self.cohort_fraction(),
+                                       self.participation_fraction())
+        if self.dp_accounting == "central":
+            from repro.core.secureagg import central_rho_scale
+            q *= central_rho_scale(self.participants_per_round())
+        return q
 
     def wire_ratio(self) -> float:
         """Compressed-update bytes as a fraction of the dense fp32 update
@@ -306,11 +384,29 @@ class FederationSpec:
         """Eq.-8 comm-cost multiplier of the pipeline: wire_ratio * q."""
         return self.wire_ratio() * self.participation_fraction()
 
+    def is_adversarial(self) -> bool:
+        """Any adversarial-fleet feature active (robust aggregator, secure
+        aggregation, or an update attack)? These are full-view reductions
+        on the pipeline seam — ``has_pipeline()`` includes them."""
+        return (self.aggregator != "mean" or self.secure_agg
+                or self.attack != "none")
+
+    def resolved_byzantine_flags(self) -> tuple[int, ...] | None:
+        """The static 0/1 byzantine membership over the C resident clients
+        (None without an attack) — deterministic per (seed, fraction), see
+        :func:`repro.core.robust.byzantine_flags`."""
+        if self.attack == "none":
+            return None
+        from repro.core.robust import byzantine_flags
+        return byzantine_flags(self.n_clients, self.byzantine_fraction,
+                               self.seed)
+
     def has_pipeline(self) -> bool:
         """Does this spec leave the seed all-clients/dense-mean protocol?
         When False, rounds are bit-for-bit the pre-pipeline engines."""
         return (self.compressor != "none"
-                or self.participants_per_round() < self.n_clients)
+                or self.participants_per_round() < self.n_clients
+                or self.is_adversarial())
 
     def aggregation_pipeline(self):
         """The AggregationPipeline for this spec, or None for the default
@@ -318,12 +414,22 @@ class FederationSpec:
         if not self.has_pipeline():
             return None
         from repro.core.aggregation import AggregationPipeline, make_compressor
+        from repro.core.robust import make_aggregator, make_attack
+        from repro.core.secureagg import SecureMaskedSum
+        flags = self.resolved_byzantine_flags()
         return AggregationPipeline(
             n_clients=self.n_clients,
             compressor=make_compressor(self.compressor, self.compression_ratio,
                                        self.compression_bits,
                                        self.kernel_backend),
-            average_opt_state=self.average_opt_state)
+            average_opt_state=self.average_opt_state,
+            aggregator=make_aggregator(self.aggregator, self.trim_fraction,
+                                       self.norm_bound_factor),
+            secure=(SecureMaskedSum(self.n_clients, self.secure_frac_bits)
+                    if self.secure_agg else None),
+            attack=(make_attack(self.attack, flags, self.attack_scale)
+                    if flags is not None else None),
+            n_participants=self.participants_per_round())
 
     def round_cost(self) -> float:
         """Eq. (8) per round: c1 * comm_scale + c2 * tau — the pipeline
@@ -383,6 +489,15 @@ class FederationSpec:
         sees the K-block, so sweeping M at fixed K reuses one XLA program
         (that exclusion is what makes cohort execution memory-bounded by
         K, and the M == C identity gate literally the same executable).
+
+        Exception to the participation-is-runtime rule: a robust
+        aggregator bakes the STATIC participant count P into its gathered
+        (P, D) block shape, so the key includes P exactly when
+        ``aggregator != "mean"`` — q sweeps under the default mean still
+        share one executable. ``dp_accounting`` is accounting-only
+        (rides :meth:`accounting_q`) and stays excluded; the byzantine
+        flag vector is included because it is baked into the compiled
+        attack select (and captures the seed/fraction dependence).
         """
         return (self.loss_fn, self.optimizer, self.n_clients, self.tau,
                 self.clip_norm, self.dp, self.num_microbatches,
@@ -392,4 +507,11 @@ class FederationSpec:
                 self.compression_ratio, self.compression_bits,
                 # async: B shapes the flush/dispatch blocks; staleness_alpha
                 # deliberately excluded (a runtime weight operand)
-                self.buffer_size)
+                self.buffer_size,
+                # adversarial fleets (PR 7)
+                self.aggregator, self.trim_fraction, self.norm_bound_factor,
+                (self.participants_per_round()
+                 if self.aggregator != "mean" else None),
+                self.secure_agg, self.secure_frac_bits,
+                self.attack, self.attack_scale,
+                self.resolved_byzantine_flags())

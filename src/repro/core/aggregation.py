@@ -225,10 +225,25 @@ def _identity(x):
 class AggregationPipeline:
     """The Eq.-7b round boundary with participation masking, compression,
     and error feedback. One instance per FederationSpec (static under jit).
+
+    The adversarial extensions (PR 7) plug in as three optional fields,
+    every one of which defaults to "off" and leaves the PR-3 expressions
+    byte-identical: ``aggregator`` (a :mod:`repro.core.robust` reduction
+    replacing the participant mean), ``secure`` (the
+    :class:`repro.core.secureagg.SecureMaskedSum` masked modular sum), and
+    ``attack`` (the byzantine upload corruption, applied at the server
+    boundary to whatever the clients would honestly have sent). They are
+    full-view reductions: under shard_map the per-shard blocks are first
+    ``all_gather``-ed (only on these paths — the default protocol keeps
+    its psum-only schedule).
     """
     n_clients: int
     compressor: Compressor | None       # None -> dense updates
     average_opt_state: bool = True
+    aggregator: Any = None              # robust (P, D) -> (D,) reduction
+    secure: Any = None                  # SecureMaskedSum | None
+    attack: Any = None                  # UpdateAttack | None
+    n_participants: int | None = None   # static P (robust row gather)
 
     def needs_residual(self) -> bool:
         return self.compressor is not None
@@ -242,14 +257,19 @@ class AggregationPipeline:
 
     def aggregate(self, prev_params, new_params, new_opt_state, prev_opt_state,
                   residual, mask, agg_keys,
-                  all_sum: Callable[[Any], Any] = _identity):
+                  all_sum: Callable[[Any], Any] = _identity,
+                  all_gather: Callable[[Any], Any] = _identity):
         """Replace the dense mean of Eq. 7b for one client block.
 
         prev/new params and opt_state: stacked pytrees, leading axis = the
         local block size B (== n_clients on the GSPMD engines, the per-shard
         block under shard_map). ``residual`` is (B, D) or None; ``mask`` is
         the 0/1 (B,) participation slice; ``agg_keys`` are per-client PRNG
-        keys (B, ...). ``all_sum`` closes the cross-shard reduction.
+        keys (B, ...). ``all_sum`` closes the cross-shard reduction;
+        ``all_gather`` (identity on the full-view engines) concatenates the
+        per-shard blocks into the global (C, ...) view, consulted ONLY by
+        the adversarial extensions — attacks and robust/secure reductions
+        need the whole cohort, not block partial sums.
 
         Returns ``(params, opt_state, residual)``: every participant's
         (compressed, error-fed) update is averaged into the global model
@@ -257,7 +277,11 @@ class AggregationPipeline:
         residual is left untouched; their optimizer state is kept when
         ``average_opt_state=False`` and — like every client's — overwritten
         with the participants' average when True (the Eq.-7b default,
-        which deliberately syncs optimizer history with the model).
+        which deliberately syncs optimizer history with the model). Robust
+        and secure reductions apply to the MODEL update only; optimizer
+        state keeps the masked-mean/keep semantics (a caveat the ROADMAP
+        table records — pair robust aggregation with stateless SGD or
+        ``average_opt_state=False`` against stateful poisoning).
         """
         block = mask.shape[0]
         denom = all_sum(jnp.sum(mask))                      # >= 1 by spec
@@ -268,14 +292,38 @@ class AggregationPipeline:
             avg = (s / denom).astype(new.dtype)
             return jnp.broadcast_to(avg[None], new.shape)
 
-        if self.compressor is not None:
+        adversarial = (self.aggregator is not None or self.secure is not None
+                       or self.attack is not None)
+        if self.compressor is not None or adversarial:
             flat_prev = jax.vmap(flatten_tree)(prev_params)     # (B, D)
             flat_new = jax.vmap(flatten_tree)(new_params)
-            corrected = (flat_new - flat_prev) + residual
-            sent = jax.vmap(self.compressor)(corrected, agg_keys)
-            sel = mask[:, None]
-            residual = sel * (corrected - sent) + (1.0 - sel) * residual
-            avg_delta = all_sum(jnp.sum(sel * sent, axis=0)) / denom
+            if self.compressor is not None:
+                corrected = (flat_new - flat_prev) + residual
+                sent = jax.vmap(self.compressor)(corrected, agg_keys)
+                sel = mask[:, None]
+                residual = sel * (corrected - sent) + (1.0 - sel) * residual
+            else:
+                sent = flat_new - flat_prev
+            if adversarial:
+                g_sent = all_gather(sent)                   # (C, D)
+                g_mask = all_gather(mask)                   # (C,)
+                if self.attack is not None:
+                    # byzantine clients corrupt their wire bytes, not their
+                    # own error-feedback bookkeeping (residual stays honest)
+                    g_sent = self.attack(g_sent)
+                if self.secure is not None:
+                    avg_delta = self.secure.masked_mean(
+                        g_sent, g_mask, all_gather(agg_keys)[0])
+                elif self.aggregator is not None:
+                    from repro.core.robust import participant_rows
+                    rows = participant_rows(g_sent, g_mask,
+                                            self.n_participants)
+                    avg_delta = self.aggregator(rows)
+                else:
+                    avg_delta = (jnp.sum(g_mask[:, None] * g_sent, axis=0)
+                                 / jnp.sum(g_mask))
+            else:
+                avg_delta = all_sum(jnp.sum(sel * sent, axis=0)) / denom
             # prev params are globally synchronized (full_average every
             # round), so any replica anchors the new global model
             single_prev = jax.tree.map(lambda x: x[0], prev_params)

@@ -112,13 +112,21 @@ def make_shard_map_round(loss_fn: Callable, optimizer: Optimizer,
     def per_shard_pipeline(params, opt_state, batches, keys, agg_keys,
                            sigmas, mask, residual):
         """Pipeline variant: masked/compressed Eq.-7b with error feedback.
-        The collective is one psum of the block's masked update sums."""
+        The collective is one psum of the block's masked update sums —
+        except under the adversarial extensions (robust aggregator /
+        secure sum / update attack), whose reductions do not decompose
+        into block partial sums: there the pipeline gathers the blocks
+        into the full (C, ...) view via ``all_gather`` (tiled along the
+        client axis, so row order matches the GSPMD engines) and every
+        shard computes the identical global result."""
         new_p, new_s, ms = jax.vmap(local_round)(params, opt_state, batches,
                                                  keys, sigmas)
         psum = lambda x: jax.lax.psum(x, axis_name=client_axis)
+        gather = lambda x: jax.lax.all_gather(x, client_axis, axis=0,
+                                              tiled=True)
         new_p, new_s, residual = pipeline.aggregate(
             params, new_p, new_s, opt_state, residual, mask, agg_keys,
-            all_sum=psum)
+            all_sum=psum, all_gather=gather)
         ms = pipeline.masked_metrics(ms, mask, all_sum=psum)
         return new_p, new_s, residual, ms
 

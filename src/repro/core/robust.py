@@ -1,0 +1,213 @@
+"""Byzantine-robust aggregation + update attacks for the Eq.-7b boundary.
+
+The paper's DP-PASGD trusts every device; the IoT-FL surveys it builds on
+(Briggs et al. 2020, arXiv:2004.11794; Khan et al. 2021, arXiv:2009.13012)
+list malicious participants as a core open challenge at the edge. This
+module supplies the two halves of that threat model as plugins on the
+:class:`repro.core.aggregation.AggregationPipeline` seam:
+
+* **robust aggregators** — replace the participant mean of Eq. 7b with a
+  reduction whose output a bounded fraction of corrupted updates cannot
+  drag arbitrarily far:
+
+  ``median``        coordinate-wise median of the participant updates
+                    (Yin et al. 2018 coordinate-median GD).
+  ``trimmed_mean``  coordinate-wise mean after dropping the
+                    ``trim_fraction`` largest and smallest values per
+                    coordinate (Yin et al. 2018).
+  ``norm_bound``    reject whole updates whose L2 norm exceeds
+                    ``factor x median participant norm``, mean of the
+                    survivors (norm-outlier screening; the median norm
+                    always survives, so the mean is never empty).
+
+  ``mean`` (the default) keeps the exact existing pipeline expressions —
+  a spec with ``aggregator="mean"`` never leaves the PR-3 code path.
+
+* **update attacks** — the byzantine clients' upload corruption, applied
+  at the server boundary to whatever the client would honestly have sent
+  (after compression: a malicious device corrupts its wire bytes, not its
+  own error-feedback bookkeeping):
+
+  ``sign_flip``  send the negated update (gradient-ascent poisoning).
+  ``scale``      send the update scaled by ``attack_scale`` (a boosted /
+                 model-replacement style attack; a NEGATIVE scale is the
+                 boosted sign-flip poison — the strongest of the three,
+                 since it both inverts and amplifies the direction).
+
+  The byzantine SET is static over a resident federation's lifetime —
+  compromised devices stay compromised — drawn once per
+  ``(seed, byzantine_fraction)`` with the repo's deterministic
+  ``default_rng((seed, TAG))`` idiom. Label-flip (the data-level attack)
+  binds to virtual client ids instead and lives in
+  :func:`repro.population.attacks.malicious_population`.
+
+Both plugin families are engine-agnostic: they consume the full (C, D)
+participant-update view, which the shard_map engine materializes with one
+``all_gather`` over the client mesh axis (only when a robust aggregator /
+attack / secure sum is actually configured — the default paths keep their
+psum-only collective schedule).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+AGGREGATORS = ("mean", "median", "trimmed_mean", "norm_bound")
+ATTACKS = ("none", "sign_flip", "scale")
+
+_BYZ_TAG = 0xB42A17
+
+
+def validate_aggregator(name: str, trim_fraction: float = 0.1,
+                        norm_bound_factor: float = 3.0) -> None:
+    """Single source of the robust-aggregator knob invariants."""
+    if name not in AGGREGATORS:
+        raise ValueError(f"aggregator must be one of {AGGREGATORS}, "
+                         f"got {name!r}")
+    if not 0.0 <= trim_fraction < 0.5:
+        raise ValueError(f"trim_fraction must be in [0, 0.5) (trimming half "
+                         f"from each end leaves nothing), "
+                         f"got {trim_fraction}")
+    if norm_bound_factor <= 0.0:
+        raise ValueError(f"norm_bound_factor must be positive, "
+                         f"got {norm_bound_factor}")
+
+
+def validate_attack(name: str, byzantine_fraction: float = 0.0,
+                    attack_scale: float = 10.0) -> None:
+    """Single source of the update-attack knob invariants."""
+    if name not in ATTACKS:
+        raise ValueError(f"attack must be one of {ATTACKS}, got {name!r}")
+    if not 0.0 <= byzantine_fraction < 1.0:
+        raise ValueError(f"byzantine_fraction must be in [0, 1) (a fully "
+                         f"byzantine fleet has no signal to aggregate), "
+                         f"got {byzantine_fraction}")
+    if attack_scale == 0.0:
+        raise ValueError(f"attack_scale must be nonzero (zero would silently "
+                         f"drop the byzantine uploads instead of corrupting "
+                         f"them; negative scales are the boosted sign-flip "
+                         f"poison), got {attack_scale}")
+
+
+# ---------------------------------------------------------------------------
+# robust aggregators: (P, D) participant updates -> (D,) aggregate
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class CoordinateMedian:
+    """Coordinate-wise median of the participant updates."""
+
+    def __call__(self, updates: jnp.ndarray) -> jnp.ndarray:
+        return jnp.median(updates, axis=0)
+
+
+@dataclass(frozen=True)
+class TrimmedMean:
+    """Coordinate-wise ``trim_fraction``-trimmed mean: per coordinate, sort
+    the P participant values, drop ``floor(trim_fraction * P)`` from each
+    end, average the rest."""
+    trim_fraction: float
+
+    def __call__(self, updates: jnp.ndarray) -> jnp.ndarray:
+        p = updates.shape[0]
+        k = int(self.trim_fraction * p)
+        s = jnp.sort(updates, axis=0)
+        return jnp.mean(s[k:p - k], axis=0)
+
+
+@dataclass(frozen=True)
+class NormBound:
+    """Mean over the participants whose L2 norm is within ``factor`` times
+    the median participant norm; norm outliers are rejected whole. The
+    median-norm update always passes its own bound (factor >= 1 keeps at
+    least half the cohort), so the denominator is never zero — it is
+    additionally floored at one for pathological factors < 1."""
+    factor: float
+
+    def __call__(self, updates: jnp.ndarray) -> jnp.ndarray:
+        norms = jnp.linalg.norm(updates, axis=1)
+        keep = (norms <= self.factor * jnp.median(norms)).astype(jnp.float32)
+        denom = jnp.maximum(jnp.sum(keep), 1.0)
+        return jnp.sum(keep[:, None] * updates, axis=0) / denom
+
+
+def make_aggregator(name: str, trim_fraction: float = 0.1,
+                    norm_bound_factor: float = 3.0):
+    """Instantiate a robust aggregator by spec name; ``"mean"`` -> None
+    (the pipeline's existing masked-mean expressions stay untouched)."""
+    validate_aggregator(name, trim_fraction, norm_bound_factor)
+    if name == "mean":
+        return None
+    if name == "median":
+        return CoordinateMedian()
+    if name == "trimmed_mean":
+        return TrimmedMean(trim_fraction)
+    return NormBound(norm_bound_factor)
+
+
+def participant_rows(updates: jnp.ndarray, mask: jnp.ndarray,
+                     n_participants: int) -> jnp.ndarray:
+    """Gather the (P, D) participant block out of the full (C, D) update
+    matrix under the 0/1 participation ``mask`` — shape-static (P is the
+    spec's fixed per-round count), so robust reductions stay jit-stable
+    under participation. The stable argsort keeps participants in client
+    order; every shipped aggregator is permutation-invariant anyway (the
+    property test of tests/test_robustness.py pins that)."""
+    order = jnp.argsort(-mask, stable=True)
+    return jnp.take(updates, order[:n_participants], axis=0)
+
+
+# ---------------------------------------------------------------------------
+# update attacks
+# ---------------------------------------------------------------------------
+
+def byzantine_flags(n_clients: int, byzantine_fraction: float,
+                    seed: int = 0) -> tuple[int, ...]:
+    """The static 0/1 byzantine membership of a resident federation:
+    ``round(fraction * C)`` clients drawn without replacement from
+    ``default_rng((seed, _BYZ_TAG))`` — deterministic per (seed, fraction),
+    the repo's stateless-sampler idiom."""
+    validate_attack("none", byzantine_fraction)
+    n_byz = int(round(byzantine_fraction * n_clients))
+    flags = np.zeros((n_clients,), np.int64)
+    if n_byz > 0:
+        rng = np.random.default_rng((seed, _BYZ_TAG))
+        flags[rng.choice(n_clients, size=n_byz, replace=False)] = 1
+    return tuple(int(f) for f in flags)
+
+
+@dataclass(frozen=True)
+class UpdateAttack:
+    """Corrupt the flagged clients' uploads at the server boundary.
+
+    ``flags`` is the static 0/1 byzantine membership over the C clients
+    (see :func:`byzantine_flags`); honest rows pass through bit-unchanged
+    (the corruption is a select, not an arithmetic no-op)."""
+    attack: str                      # "sign_flip" | "scale"
+    flags: tuple[int, ...]
+    scale: float = 10.0
+
+    def __call__(self, updates: jnp.ndarray) -> jnp.ndarray:
+        sel = jnp.asarray(self.flags, jnp.float32)[:, None] > 0
+        if self.attack == "sign_flip":
+            return jnp.where(sel, -updates, updates)
+        return jnp.where(sel, self.scale * updates, updates)
+
+
+def make_attack(name: str, flags: tuple[int, ...],
+                attack_scale: float = 10.0):
+    """Instantiate an update attack by spec name; ``"none"`` (or an
+    all-honest flag vector) -> None."""
+    validate_attack(name, attack_scale=attack_scale)
+    if name == "none" or not any(flags):
+        return None
+    return UpdateAttack(name, tuple(int(f) for f in flags), attack_scale)
+
+
+def flip_labels(y: np.ndarray, n_classes: int) -> np.ndarray:
+    """The label-flip data poison: class c -> n_classes - 1 - c (the
+    standard targeted flip; an involution, so flipping twice restores the
+    data). Used by :func:`repro.population.attacks.malicious_population`."""
+    return (n_classes - 1 - np.asarray(y)).astype(np.asarray(y).dtype)

@@ -1,0 +1,252 @@
+"""Pairwise-mask secure-aggregation simulation (Bonawitz et al. 2017 style).
+
+DP-PASGD's honest-but-curious server sees every client's individual noisy
+update; the IoT-FL reviews (Briggs et al. 2020, arXiv:2004.11794) pair
+local DP with *secure aggregation* so the server only ever materializes
+the cohort SUM. This module simulates the arithmetic core of the pairwise
+masking protocol, in both a host-level (vid-addressed, numpy) form and a
+jit-traceable form plugged into the aggregation pipeline:
+
+* updates are encoded to **fixed point** (``round(x * 2^frac_bits)``,
+  arithmetic modulo 2^32) — modular integer arithmetic is what makes mask
+  cancellation EXACT rather than float-approximate;
+* every ordered client pair (i, j) shares a per-round mask
+  ``m_ij = -m_ji (mod 2^32)`` derived deterministically from
+  ``(seed, vid_i, vid_j, round_idx)`` (the repo's stateless
+  ``default_rng((seed, TAG, ...))`` idiom — a stand-in for the
+  Diffie-Hellman-agreed PRG seeds of the real protocol);
+* client i uploads ``enc(x_i) + sum_j m_ij`` — individually
+  uniform-random garbage to the server — and the masks telescope away in
+  the cohort sum;
+* **dropout recovery**: when clients drop mid-round (the PR-5
+  ``HeterogeneousCohort`` unreliability model), the survivors' uploads
+  still carry their masks against the dropped; the server reconstructs
+  exactly those pair masks (``dropout_correction`` — in the real protocol
+  via the survivors' secret shares of the dropped clients' seeds) and
+  subtracts them, recovering the exact survivor sum.
+
+Exactness caveat: decoding is exact while the true survivor sum stays in
+``[-2^31, 2^31) / 2^frac_bits`` per coordinate — at the default 16
+fractional bits that is a per-coordinate sum magnitude of 32768, far
+beyond any clipped-update cohort this repo runs. Quantization (the one
+lossy step, bounded by ``0.5 / 2^frac_bits`` per client per coordinate)
+happens at ENCODE time; masking and dropout recovery add zero error on
+top — ``masked == unmasked`` holds bit-for-bit in the integer domain,
+which is the identity the tests pin.
+
+Privacy accounting: with secure aggregation the honest-but-curious server
+observes only the masked SUM, whose noise is the P participants' pooled
+Gaussian noise — see :func:`central_rho_scale` for the central-DP
+accounting mode (``FederationSpec(dp_accounting="central")``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterable, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SECAGG_TAG = 0x5ECA66
+MODULUS = 2 ** 32
+
+
+def validate_secure(frac_bits: int) -> None:
+    """Single source of the secure-aggregation knob invariants."""
+    if not 1 <= frac_bits <= 24:
+        raise ValueError(f"secure_frac_bits must be in [1, 24] (above 24 "
+                         f"a single encoded unit-scale update can overflow "
+                         f"the 2^32 field), got {frac_bits}")
+
+
+# ---------------------------------------------------------------------------
+# fixed-point codec (numpy, host side)
+# ---------------------------------------------------------------------------
+
+def fp_encode(x, frac_bits: int = 16) -> np.ndarray:
+    """float -> field element: ``round(x * 2^frac_bits) mod 2^32`` (uint32)."""
+    q = np.round(np.asarray(x, np.float64) * (1 << frac_bits)).astype(np.int64)
+    return (q % MODULUS).astype(np.uint32)
+
+
+def fp_decode(u, frac_bits: int = 16) -> np.ndarray:
+    """field element -> float, interpreting the upper half as negatives."""
+    v = np.asarray(u, np.int64)
+    v = np.where(v >= MODULUS // 2, v - MODULUS, v)
+    return v / float(1 << frac_bits)
+
+
+def _mod_sum(terms) -> np.ndarray:
+    total = None
+    for t in terms:
+        t = np.asarray(t, np.int64)
+        total = t if total is None else (total + t) % MODULUS
+    return total.astype(np.uint32)
+
+
+# ---------------------------------------------------------------------------
+# host-level protocol (vid-addressed; composes with population cohorts)
+# ---------------------------------------------------------------------------
+
+def pairwise_mask(seed: int, vid_i: int, vid_j: int, round_idx: int,
+                  dim: int) -> np.ndarray:
+    """The (dim,) uint32 mask client ``vid_i`` ADDS for its pair with
+    ``vid_j`` this round. Derived from the unordered pair
+    ``default_rng((seed, TAG, lo, hi, round_idx))`` and signed by the
+    ordering, so ``pairwise_mask(i, j) + pairwise_mask(j, i) == 0 (mod
+    2^32)`` — the cancellation the whole protocol rests on."""
+    if vid_i == vid_j:
+        raise ValueError(f"a client ({vid_i}) shares no mask with itself")
+    lo, hi = (vid_i, vid_j) if vid_i < vid_j else (vid_j, vid_i)
+    rng = np.random.default_rng((seed, _SECAGG_TAG, lo, hi, round_idx))
+    m = rng.integers(0, MODULUS, size=dim, dtype=np.uint64).astype(np.uint32)
+    if vid_i == lo:
+        return m
+    return ((MODULUS - m.astype(np.int64)) % MODULUS).astype(np.uint32)
+
+
+def masked_update(update, vid: int, cohort: Iterable[int], seed: int,
+                  round_idx: int, frac_bits: int = 16) -> np.ndarray:
+    """What client ``vid`` uploads: its fixed-point update plus its pair
+    masks against every OTHER cohort member — marginally uniform on the
+    field, so the server learns nothing from it alone."""
+    validate_secure(frac_bits)
+    dim = np.asarray(update).shape[-1]
+    terms = [fp_encode(update, frac_bits)]
+    terms += [pairwise_mask(seed, vid, int(j), round_idx, dim)
+              for j in cohort if int(j) != vid]
+    return _mod_sum(terms)
+
+
+def dropout_correction(survivors: Iterable[int], dropped: Iterable[int],
+                       seed: int, round_idx: int, dim: int) -> np.ndarray:
+    """The mask residue the dropped clients leave in the survivor sum:
+    ``sum_{i in survivors, j in dropped} m_ij (mod 2^32)`` — exactly what
+    the real protocol reconstructs from the survivors' secret shares of
+    the dropped clients' mask seeds. Zero when nothing dropped."""
+    terms = [np.zeros((dim,), np.uint32)]
+    for i in survivors:
+        for j in dropped:
+            terms.append(pairwise_mask(seed, int(i), int(j), round_idx, dim))
+    return _mod_sum(terms)
+
+
+def secure_aggregate(updates: Mapping[int, np.ndarray],
+                     cohort: Iterable[int], seed: int, round_idx: int,
+                     dropped: Iterable[int] = (),
+                     frac_bits: int = 16) -> np.ndarray:
+    """The server's view of one secure-aggregation round: sum the
+    survivors' masked uploads, subtract the reconstructed dropped-pair
+    masks, decode. Returns the (dim,) float survivor-update sum — equal,
+    bit-for-bit in the integer domain, to summing the survivors' plain
+    fixed-point encodings (:func:`unmasked_fixed_point_sum`)."""
+    cohort = [int(v) for v in cohort]
+    dropped = {int(v) for v in dropped}
+    if not set(dropped) <= set(cohort):
+        raise ValueError(f"dropped clients {sorted(dropped)} must be cohort "
+                         f"members {cohort}")
+    survivors = [v for v in cohort if v not in dropped]
+    if not survivors:
+        raise ValueError("every cohort member dropped: nothing to aggregate")
+    uploads = [masked_update(updates[v], v, cohort, seed, round_idx,
+                             frac_bits) for v in survivors]
+    dim = uploads[0].shape[-1]
+    total = _mod_sum(uploads)
+    corr = dropout_correction(survivors, dropped, seed, round_idx, dim)
+    total = ((total.astype(np.int64) - corr.astype(np.int64)) % MODULUS)
+    return fp_decode(total.astype(np.uint32), frac_bits)
+
+
+def unmasked_fixed_point_sum(updates: Mapping[int, np.ndarray],
+                             survivors: Iterable[int],
+                             frac_bits: int = 16) -> np.ndarray:
+    """The reference the masked protocol must reproduce exactly: the plain
+    modular sum of the survivors' fixed-point encodings, decoded."""
+    total = _mod_sum(fp_encode(updates[int(v)], frac_bits)
+                     for v in survivors)
+    return fp_decode(total, frac_bits)
+
+
+# ---------------------------------------------------------------------------
+# central-DP accounting of the masked sum
+# ---------------------------------------------------------------------------
+
+def central_rho_scale(n_participants: int) -> float:
+    """zCDP scale factor of the central (aggregate-observer) accounting
+    mode: the masked sum pools P independent per-client Gaussian noises,
+    so against an observer who only sees the sum, each client's release
+    carries an effective noise multiplier ``sqrt(P) * sigma`` — rho is
+    quadratic in 1/sigma (Lemma 2), hence the per-step charge scales by
+    ``1/P`` (distributed-DP aggregation amplification, cf. the
+    distributed-Gaussian treatments in Kairouz et al. 2021).
+
+    Deliberate modeling caveats (mirror ``subsampled_rho``'s style): the
+    bound holds against the AGGREGATE observer only — a client's own
+    local view keeps the full Lemma-2 cost; and it credits every
+    participant's noise as honest, so it composes with the byzantine
+    threat model of :mod:`repro.core.robust` only insofar as byzantine
+    clients still add their noise. The sound local default
+    (``dp_accounting="local"``) is unaffected by secure aggregation."""
+    if n_participants < 1:
+        raise ValueError(f"n_participants must be >= 1, "
+                         f"got {n_participants}")
+    return 1.0 / n_participants
+
+
+# ---------------------------------------------------------------------------
+# jit-traceable masked sum (the AggregationPipeline plugin)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class SecureMaskedSum:
+    """The in-engine twin of the host protocol: same fixed-point field,
+    same antisymmetric pair masks and dropout recovery, with masks drawn
+    from the round's PRNG stream (``fold_in`` of the per-round aggregation
+    key) instead of vid-addressed host RNG — the engines have no round
+    index operand, and the carried key already advances per round. The
+    non-participants of the round's mask ARE the dropped set: their pair
+    masks are reconstructed and subtracted, exercising the recovery path
+    every partial-participation round.
+
+    Static under jit (one instance per FederationSpec); O(C^2 * D) mask
+    material per round — the cohort sizes this repo runs (K <= a few
+    hundred) keep that far below the batch itself."""
+    n_clients: int
+    frac_bits: int = 16
+
+    def __post_init__(self):
+        validate_secure(self.frac_bits)
+
+    def masked_mean(self, updates: jnp.ndarray, mask: jnp.ndarray,
+                    base_key: jax.Array) -> jnp.ndarray:
+        """(C, D) updates + 0/1 (C,) participation -> the (D,) participant
+        MEAN, computed through the masked modular sum. uint32 end to end:
+        jnp reductions keep the input dtype, so every sum wraps mod 2^32
+        exactly like the host protocol."""
+        c, d = self.n_clients, updates.shape[1]
+        scale = float(1 << self.frac_bits)
+        enc = jnp.round(updates.astype(jnp.float32) * scale).astype(
+            jnp.int32).astype(jnp.uint32)
+        key = jax.random.fold_in(base_key, _SECAGG_TAG)
+        ii, jj = np.triu_indices(c, k=1)
+        if len(ii):
+            pair_ids = jnp.asarray(ii * c + jj, jnp.uint32)
+            bits = jax.vmap(lambda pid: jax.random.bits(
+                jax.random.fold_in(key, pid), (d,), jnp.uint32))(pair_ids)
+            masks = jnp.zeros((c, c, d), jnp.uint32)
+            masks = masks.at[ii, jj].set(bits)
+            masks = masks.at[jj, ii].set(jnp.zeros_like(bits) - bits)
+        else:
+            masks = jnp.zeros((c, c, d), jnp.uint32)
+        uploads = enc + jnp.sum(masks, axis=1)          # each client's view
+        part = mask > 0
+        server = jnp.sum(jnp.where(part[:, None], uploads, jnp.uint32(0)),
+                         axis=0)
+        # dropout recovery: reconstruct the (survivor, dropped) pair masks
+        left = part[:, None] & ~part[None, :]
+        corr = jnp.sum(jnp.where(left[:, :, None], masks, jnp.uint32(0)),
+                       axis=(0, 1))
+        total = server - corr
+        signed = total.astype(jnp.int32).astype(jnp.float32) / scale
+        return signed / jnp.sum(mask)

@@ -1,5 +1,10 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys as _sys
+# only effective before jax initializes (the intended `python -m` entry);
+# when imported into a live process (tests), mutating XLA_FLAGS would do
+# nothing for jax and only pollute the env for later readers
+if "jax" not in _sys.modules:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 """Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
 combination against the production mesh, and extract the roofline terms

@@ -78,6 +78,12 @@ def build_federation(cfg, n_clients: int, tau: int, batch_size: int,
                      compression_bits: int = 8, population: int = 0,
                      buffer_size: int | None = None,
                      staleness_alpha: float = 0.0, latency_model=None,
+                     aggregator: str = "mean", trim_fraction: float = 0.1,
+                     norm_bound_factor: float = 3.0,
+                     secure_agg: bool = False, secure_frac_bits: int = 16,
+                     dp_accounting: str = "local", attack: str = "none",
+                     byzantine_fraction: float = 0.0,
+                     attack_scale: float = 10.0,
                      rng=None):
     """Assemble the repro.api handles for a transformer federation.
 
@@ -113,6 +119,11 @@ def build_federation(cfg, n_clients: int, tau: int, batch_size: int,
         participation=participation, compressor=compressor,
         compression_ratio=compression_ratio,
         compression_bits=compression_bits,
+        aggregator=aggregator, trim_fraction=trim_fraction,
+        norm_bound_factor=norm_bound_factor, secure_agg=secure_agg,
+        secure_frac_bits=secure_frac_bits, dp_accounting=dp_accounting,
+        attack=attack, byzantine_fraction=byzantine_fraction,
+        attack_scale=attack_scale,
         population=population or None,
         cohort_size=n_clients if population else None,
         buffer_size=buffer_size if engine == "async_buffered" else None,
@@ -139,6 +150,11 @@ def federation_meta(spec) -> dict:
             "compression_bits": spec.compression_bits,
             "participation": spec.participants_per_round(),
             "population": spec.population,
+            "aggregator": spec.aggregator,
+            "secure_agg": spec.secure_agg,
+            "dp_accounting": spec.dp_accounting,
+            "attack": spec.attack,
+            "byzantine_fraction": spec.byzantine_fraction,
             "topology": spec.topology}
 
 
@@ -211,6 +227,34 @@ def main(argv=None):
                     choices=("none", "topk", "randk", "qsgd"))
     ap.add_argument("--compress-ratio", type=float, default=0.1)
     ap.add_argument("--compress-bits", type=int, default=8)
+    ap.add_argument("--aggregator", default="mean",
+                    choices=("mean", "median", "trimmed_mean", "norm_bound"),
+                    help="Eq.-7b reduction over participant updates; the "
+                         "robust choices bound a byzantine minority's pull "
+                         "(repro.core.robust)")
+    ap.add_argument("--trim-fraction", type=float, default=0.1,
+                    help="per-end trim of --aggregator trimmed_mean")
+    ap.add_argument("--norm-bound-factor", type=float, default=3.0,
+                    help="--aggregator norm_bound rejects updates whose L2 "
+                         "norm exceeds factor x median participant norm")
+    ap.add_argument("--secure-agg", action="store_true",
+                    help="pairwise-mask secure-aggregation simulation "
+                         "(repro.core.secureagg): the server only ever "
+                         "materializes the masked fixed-point SUM")
+    ap.add_argument("--secure-frac-bits", type=int, default=16,
+                    help="fixed-point fractional bits of --secure-agg")
+    ap.add_argument("--dp-accounting", default="local",
+                    choices=("local", "central"),
+                    help="'central' (needs --secure-agg) accounts the "
+                         "aggregate-only observer: per-step rho scales by "
+                         "1/P for the P pooled participant noises")
+    ap.add_argument("--attack", default="none",
+                    choices=("none", "sign_flip", "scale"),
+                    help="simulate byzantine upload corruption by a static "
+                         "--byzantine-fraction subset of resident clients")
+    ap.add_argument("--byzantine-fraction", type=float, default=0.0)
+    ap.add_argument("--attack-scale", type=float, default=10.0,
+                    help="multiplier of --attack scale")
     ap.add_argument("--save", default=None)
     args = ap.parse_args(argv)
     apply_env_profile(args.env_profile, host_devices=args.host_devices)
@@ -265,7 +309,13 @@ def main(argv=None):
         compression_bits=args.compress_bits, population=args.population,
         buffer_size=args.async_buffer or None,
         staleness_alpha=args.staleness_alpha,
-        latency_model=latency_model, rng=rng)
+        latency_model=latency_model,
+        aggregator=args.aggregator, trim_fraction=args.trim_fraction,
+        norm_bound_factor=args.norm_bound_factor,
+        secure_agg=args.secure_agg, secure_frac_bits=args.secure_frac_bits,
+        dp_accounting=args.dp_accounting, attack=args.attack,
+        byzantine_fraction=args.byzantine_fraction,
+        attack_scale=args.attack_scale, rng=rng)
     spec = spec.replace(eps_th=args.eps, c_th=args.cth,
                         c1=args.c1, c2=args.c2)
     t0 = time.time()

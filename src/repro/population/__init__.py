@@ -23,6 +23,11 @@ With M == C and cohort == population this path is bit-for-bit the dense
 ``repro.api`` participation path (the identity gate of
 tests/test_population.py).
 """
+from repro.population.attacks import (
+    POPULATION_ATTACKS,
+    is_byzantine_vid,
+    malicious_population,
+)
 from repro.population.population import (
     ClientPopulation,
     population_from_federated,
@@ -52,6 +57,7 @@ from repro.population.samplers import (
 from repro.population.store import ClientStore
 
 __all__ = [
+    "POPULATION_ATTACKS", "is_byzantine_vid", "malicious_population",
     "ClientPopulation", "population_from_federated", "population_from_sampler",
     "synthetic_population",
     "PopulationState", "cohort_batch", "cohort_batches", "device_block_bytes",

@@ -1,0 +1,81 @@
+"""Malicious virtual clients: data-level poisoning bound to vids.
+
+The update attacks of :mod:`repro.core.robust` corrupt a STATIC byzantine
+set of resident clients at the server boundary — the right model when C
+device slots are stable identities. A :class:`ClientPopulation` has no
+stable slots: cohort slot k hosts a different virtual client every round,
+so "client 3 is compromised" must bind to the *virtual id*, and the
+corruption must ride the data path the vid owns. This module wraps a
+population so that a deterministic ``byzantine_fraction`` subset of its M
+virtual ids serves poisoned shards:
+
+* ``label_flip`` — the classic data poison: every label the byzantine vid
+  serves is flipped ``c -> n_classes - 1 - c``
+  (:func:`repro.core.robust.flip_labels`). Feature tensors pass through
+  bit-unchanged, so an honest-vid cohort round is bit-for-bit the base
+  population's.
+
+Byzantine membership is per-vid deterministic (hash-style draw from
+``(seed, TAG, vid)``), so it is stable across rounds, cohort draws, and
+process restarts without materializing an M-length table — the same
+laziness contract as the population samplers themselves.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.robust import _BYZ_TAG, flip_labels, validate_attack
+from repro.population.population import ClientPopulation
+
+POPULATION_ATTACKS = ("label_flip",)
+
+
+def is_byzantine_vid(vid: int, byzantine_fraction: float,
+                     seed: int = 0) -> bool:
+    """Deterministic per-vid byzantine membership: an independent
+    Bernoulli(byzantine_fraction) coin from ``default_rng((seed, TAG,
+    vid))`` — O(1) per query, no M-length state, stable for the
+    population's lifetime. (The resident-mode analogue,
+    :func:`repro.core.robust.byzantine_flags`, draws an EXACT count
+    without replacement — affordable at C resident clients, not at
+    M = 10^6 virtual ones.)"""
+    validate_attack("none", byzantine_fraction)
+    rng = np.random.default_rng((seed, _BYZ_TAG, int(vid)))
+    return bool(rng.random() < byzantine_fraction)
+
+
+def malicious_population(base: ClientPopulation, attack: str = "label_flip",
+                         byzantine_fraction: float = 0.25,
+                         n_classes: int = 2,
+                         seed: int = 0) -> ClientPopulation:
+    """Wrap ``base`` so its byzantine vids serve poisoned shards.
+
+    The wrapper is itself a lazy :class:`ClientPopulation` (same M, same
+    sampler contract), so it drops into ``train_population`` /
+    ``run_cohort_round`` unchanged and composes with
+    :class:`repro.population.samplers.HeterogeneousCohort` — an unreliable
+    AND partly-malicious fleet is
+    ``malicious_population(synthetic_population(M))`` driven by a
+    heterogeneous cohort sampler. With ``byzantine_fraction=0`` the
+    wrapper is the identity: every shard passes through bit-unchanged.
+    """
+    if attack not in POPULATION_ATTACKS:
+        raise ValueError(f"population attack must be one of "
+                         f"{POPULATION_ATTACKS} (update-level attacks are "
+                         f"resident-mode features — see "
+                         f"FederationSpec.attack), got {attack!r}")
+    validate_attack("none", byzantine_fraction)
+    if n_classes < 2:
+        raise ValueError(f"n_classes must be >= 2, got {n_classes}")
+
+    def sampler(vid: int, tau: int, rng: np.random.Generator):
+        shard = base.sampler(vid, tau, rng)
+        if not is_byzantine_vid(vid, byzantine_fraction, seed):
+            return shard
+        poisoned = dict(shard)
+        poisoned["y"] = flip_labels(shard["y"], n_classes)
+        return poisoned
+
+    return ClientPopulation(
+        n_clients=base.n_clients, sampler=sampler,
+        name=f"{base.name or 'population'}+{attack}{byzantine_fraction}")

@@ -1,5 +1,26 @@
 """Suite-wide setup: make `from hypothesis import ...` work with or without
-the real package installed (see tests/_hypothesis_compat.py)."""
+the real package installed (see tests/_hypothesis_compat.py), and the
+fresh-buffer fixture that keeps donated-state tests order-independent."""
 import _hypothesis_compat
 
+import jax
+import jax.numpy as jnp
+import pytest
+
 _hypothesis_compat.install()
+
+
+@pytest.fixture
+def fresh_buffers():
+    """Factory copying a pytree onto FRESH device buffers.
+
+    ``run_round`` / ``run_rounds`` donate their state operands (params,
+    opt_state, residual): after the call, the buffers the caller passed in
+    are deleted. A test that wants to feed the same state to a second
+    jitted call must hand that call its own copy — do it through this
+    fixture instead of ordering the calls around the donation, so no test
+    carries a hidden execution-order dependency.
+    """
+    def copy(tree):
+        return jax.tree.map(jnp.copy, tree)
+    return copy

@@ -130,7 +130,8 @@ def test_participation_mask_fixed_size():
 # ------------------------ refactor guard (satellite) ------------------------
 
 @pytest.mark.parametrize("engine", ["vmap", "map", "shard_map"])
-def test_default_spec_bitwise_identical_to_pre_refactor(engine):
+def test_default_spec_bitwise_identical_to_pre_refactor(engine,
+                                                        fresh_buffers):
     """participation=1.0, compressor='none' routes through the exact seed
     code path: the engine builds the legacy 5-arg round_step (not the
     pipeline variant) and its jaxpr is IDENTICAL to a directly-built
@@ -164,13 +165,14 @@ def test_default_spec_bitwise_identical_to_pre_refactor(engine):
                              spec.fl_config(vmap_clients=(engine == "vmap")))
     _, sub = jax.random.split(state.key)
     sig = jnp.asarray(spec.resolved_sigmas(), jnp.float32)
-    args = (state.params, state.opt_state, _batch(), sub, sig)
+    # run_round donates state's buffers, so the reference call gets copies
+    args = (fresh_buffers(state.params), fresh_buffers(state.opt_state),
+            _batch(), sub, sig)
     assert str(jax.make_jaxpr(engine_fn)(*args)) == \
         str(jax.make_jaxpr(rs)(*args))
 
-    # want_p first: run_round donates state's buffers (args reuses them)
-    want_p, _, _ = jax.jit(rs)(*args)
     nxt, _ = run_round(spec, state, _batch(), check_budgets=False)
+    want_p, _, _ = jax.jit(rs)(*args)
     for a, b in zip(jax.tree.leaves(nxt.params), jax.tree.leaves(want_p)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=1e-6, atol=1e-8)

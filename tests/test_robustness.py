@@ -1,0 +1,521 @@
+"""Adversarial-fleet tests: the attack-matrix harness pinning PR 7.
+
+Four gates, per ISSUE:
+
+1. **Identity** — with every adversarial knob at its default the pipeline
+   is bit-for-bit the PR-3 code path: same engine key, same collective
+   schedule (the shard_map jaxpr stays psum-only, no all_gather), and a
+   zero-fraction attack spec reproduces the plain run exactly.
+2. **Secure aggregation** — the in-engine masked modular sum equals the
+   unmasked fixed-point sum EXACTLY (integer domain), including under
+   dropout (non-participants are the dropped set); the full secure round
+   matches the plain mean round to quantization precision.
+3. **Attack matrix** — engine x aggregator x attack x byzantine-fraction:
+   every robust aggregator's attack-induced perturbation is strictly
+   below the mean's, and the mean demonstrably diverges under the boosted
+   attack. All runs share seeds, so the margins are deterministic.
+4. **Accounting** — robust/secure knobs leave the local rho ledger
+   byte-identical; ``dp_accounting="central"`` scales every charge by
+   exactly 1/P and stays out of the engine key.
+
+Satellite property tests (hypothesis, or the tests/_hypothesis_compat
+shim): robust aggregators are permutation-invariant and coordinate-wise
+bounded by their inputs.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.api import FederationSpec, init_state, run_round
+from repro.core.robust import (
+    CoordinateMedian,
+    NormBound,
+    TrimmedMean,
+    UpdateAttack,
+    byzantine_flags,
+    make_aggregator,
+    make_attack,
+    participant_rows,
+)
+from repro.core.secureagg import SecureMaskedSum
+from repro.models.linear import init_linear, logreg_loss
+from repro.optim import sgd
+
+C, TAU, DIM, B = 8, 3, 8, 4
+ROUNDS = 3
+BYZ = 0.25                       # 2 of the 8 clients
+OPT = sgd(0.2)                   # one optimizer instance -> shared engine keys
+
+
+def _spec(**kw):
+    base = dict(n_clients=C, tau=TAU, loss_fn=logreg_loss, optimizer=OPT,
+                clip_norm=1.0, dp=True, sigmas=(0.3,) * C,
+                batch_sizes=(B,) * C)
+    base.update(kw)
+    return FederationSpec(**base)
+
+
+def _batch(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"x": jnp.asarray(rng.normal(size=(C, TAU, B, DIM)), jnp.float32),
+            "y": jnp.asarray(rng.integers(0, 2, size=(C, TAU, B)), jnp.int32)}
+
+
+def _run(spec, rounds=ROUNDS):
+    state = init_state(spec, init_linear(DIM))
+    for r in range(rounds):
+        state, _ = run_round(spec, state, _batch(r), check_budgets=False)
+    return state
+
+
+def _global_vec(state):
+    """Client 0's replica flattened (full_average keeps replicas equal)."""
+    return np.concatenate([np.asarray(l)[0].ravel()
+                           for l in jax.tree.leaves(state.params)])
+
+
+# the matrix axes: every robust aggregator (trim/factor sized so the 25%
+# byzantine minority is actually inside the trimmed/rejected region), every
+# update attack (scale boosted so the mean visibly diverges)
+AGGREGATORS = [
+    ("mean", {}),
+    ("median", {}),
+    ("trimmed_mean", dict(trim_fraction=0.25)),
+    ("norm_bound", dict(norm_bound_factor=2.0)),
+]
+ATTACKS = [
+    ("sign_flip", {}),
+    ("scale", dict(attack_scale=25.0)),
+]
+
+# final params are deterministic per spec (shared seeds), so the matrix
+# reuses each clean/attacked endpoint across assertions
+_PARAMS_CACHE = {}
+
+
+def _final_params(**kw):
+    key = tuple(sorted(kw.items()))
+    if key not in _PARAMS_CACHE:
+        _PARAMS_CACHE[key] = _global_vec(_run(_spec(**kw)))
+    return _PARAMS_CACHE[key]
+
+
+# ---------------------------------------------------------------------------
+# gate 1: identity — default adversarial knobs are bit-for-bit inert
+# ---------------------------------------------------------------------------
+
+def test_adversarial_defaults_do_not_change_engine_key():
+    """Spelling out every adversarial default produces the PR-3 engine key:
+    cached compiled rounds survive the field additions unchanged."""
+    plain = _spec(participation=0.5)
+    explicit = _spec(participation=0.5, aggregator="mean",
+                     trim_fraction=0.1, norm_bound_factor=3.0,
+                     secure_agg=False, secure_frac_bits=16,
+                     dp_accounting="local", attack="none",
+                     byzantine_fraction=0.0, attack_scale=10.0)
+    assert explicit.engine_key() == plain.engine_key()
+    assert not plain.is_adversarial()
+    # the q-sweep reuse contract of the mean path survives too...
+    assert plain.replace(participation=0.75).engine_key() == plain.engine_key()
+    # ...while a robust aggregator bakes the static P in
+    rob = _spec(participation=0.5, aggregator="median")
+    assert rob.replace(participation=0.75).engine_key() != rob.engine_key()
+
+
+@pytest.mark.parametrize("name,kw", [("q50", dict(participation=0.5)),
+                                     ("topk25", dict(compressor="topk",
+                                                     compression_ratio=0.25))],
+                         ids=["q50", "topk25"])
+def test_default_pipeline_keeps_psum_only_schedule(name, kw):
+    """The shard_map pipeline round of a NON-adversarial spec contains no
+    all_gather: the PR-3 psum-of-block-sums collective schedule is intact,
+    byte for byte. The adversarial variant of the same spec does gather —
+    the full-view reduction is pay-for-use."""
+    from repro.api import get_engine
+
+    def jaxpr_of(spec):
+        state = init_state(spec, init_linear(DIM))
+        fn = get_engine("shard_map")(spec)
+        _, sub = jax.random.split(state.key)
+        sig = jnp.asarray(spec.resolved_sigmas(), jnp.float32)
+        mask = jnp.ones((C,), jnp.float32)
+        residual = (jnp.zeros_like(state.residual)
+                    if state.residual is not None else
+                    jnp.zeros((C, 1), jnp.float32))
+        if spec.has_pipeline() and state.residual is None:
+            # participation-only pipelines carry residual=None
+            return str(jax.make_jaxpr(fn)(
+                state.params, state.opt_state, _batch(), sub, sig, mask,
+                None))
+        return str(jax.make_jaxpr(fn)(
+            state.params, state.opt_state, _batch(), sub, sig, mask,
+            residual))
+
+    assert "all_gather" not in jaxpr_of(_spec(engine="shard_map", **kw))
+    assert "all_gather" in jaxpr_of(_spec(engine="shard_map",
+                                          aggregator="median", **kw))
+
+
+def test_zero_fraction_attack_is_bitwise_noop():
+    """byzantine_fraction=0 resolves to attack=None inside the pipeline:
+    the run is bit-identical to the plain spec's (the corruption is a
+    select over an empty set, and make_attack drops it entirely)."""
+    plain = _spec(participation=0.5)
+    armed = _spec(participation=0.5, attack="sign_flip",
+                  byzantine_fraction=0.0)
+    assert armed.aggregation_pipeline().attack is None
+    s_p, s_a = _run(plain), _run(armed)
+    for a, b in zip(jax.tree.leaves(s_p.params), jax.tree.leaves(s_a.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(s_p.rho, s_a.rho)
+
+
+# ---------------------------------------------------------------------------
+# gate 2: secure aggregation — masked == unmasked, exactly
+# ---------------------------------------------------------------------------
+
+def test_masked_mean_exact_on_fixed_point_grid():
+    """Updates already on the 2^-frac_bits grid survive the full masked
+    protocol EXACTLY — encode, pairwise masking, dropout recovery for the
+    non-participants, decode — equal to the plain masked mean with zero
+    tolerance. (Quantization is the only lossy step; on-grid inputs have
+    none, so any discrepancy here is a protocol bug, not rounding.)"""
+    sec = SecureMaskedSum(n_clients=C, frac_bits=10)
+    rng = np.random.default_rng(0)
+    grid = rng.integers(-4000, 4000, size=(C, 17)) / float(1 << 10)
+    updates = jnp.asarray(grid, jnp.float32)
+    base_key = jax.random.PRNGKey(3)
+    for dropped in (0, 3):
+        mask = np.ones((C,), np.float32)
+        if dropped:
+            mask[rng.choice(C, size=dropped, replace=False)] = 0.0
+        got = np.asarray(sec.masked_mean(updates, jnp.asarray(mask),
+                                         base_key))
+        # the reference decodes the plain integer survivor sum with the
+        # identical float32 arithmetic: bitwise equality then pins that
+        # masking + dropout recovery added ZERO error in the field
+        int_sum = (grid * (1 << 10)).astype(np.int64)[mask > 0].sum(axis=0)
+        want = (int_sum.astype(np.int32).astype(np.float32)
+                / np.float32(1 << 10)) / np.float32(mask.sum())
+        np.testing.assert_array_equal(got, want)
+
+
+def test_masked_uploads_are_not_the_plaintext():
+    """Sanity on the simulation's point: an individual masked upload is
+    garbage (mask-dominated), even though the sum is exact."""
+    from repro.core.secureagg import masked_update, fp_decode, fp_encode
+    upd = np.full((32,), 0.125)
+    up = masked_update(upd, vid=0, cohort=range(C), seed=0, round_idx=0)
+    assert not np.array_equal(up, fp_encode(upd))
+    # decoded garbage is nowhere near the tiny true value
+    assert np.max(np.abs(fp_decode(up))) > 1.0
+
+
+@pytest.mark.parametrize("engine", ["vmap", "map", "shard_map"])
+@pytest.mark.parametrize("name,kw", [
+    # dense via the identity codec: both sides on the pipeline key
+    # schedule (a non-pipeline dense spec draws different DP noise)
+    ("dense", dict(compressor="topk", compression_ratio=1.0)),
+    ("q50-dropout", dict(participation=0.5)),
+], ids=["dense", "q50-dropout"])
+def test_secure_round_matches_mean_round(engine, name, kw):
+    """A secure_agg federation trains within quantization distance of the
+    plain-mean federation — same participant draws, same DP noise, the
+    masked sum replacing the plain sum. The q50 case runs the dropout
+    recovery every round (non-participants ARE the dropped set). The rho
+    ledger is byte-identical: secure aggregation changes who SEES the
+    updates, not the executed mechanism."""
+    plain = _run(_spec(engine=engine, **kw))
+    sec = _run(_spec(engine=engine, secure_agg=True, **kw))
+    # 3 rounds of <= C pooled quantization errors each, generously bounded
+    np.testing.assert_allclose(_global_vec(sec), _global_vec(plain),
+                               atol=1e-3)
+    np.testing.assert_array_equal(plain.rho, sec.rho)
+
+
+# ---------------------------------------------------------------------------
+# gate 3: the attack matrix
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("attack,akw", ATTACKS, ids=[a for a, _ in ATTACKS])
+def test_robust_aggregators_bound_attack_perturbation(attack, akw):
+    """The matrix centerpiece: at byzantine fraction 0.25, every robust
+    aggregator's perturbation (distance between its attacked and clean
+    endpoints, all seeds shared) is strictly below the mean's — and under
+    the boosted scale attack the mean diverges by an order of magnitude
+    while every robust endpoint stays put."""
+    devs = {}
+    for agg, kw in AGGREGATORS:
+        clean = _final_params(aggregator=agg, **kw)
+        dirty = _final_params(aggregator=agg, attack=attack,
+                              byzantine_fraction=BYZ, **kw, **akw)
+        devs[agg] = float(np.linalg.norm(dirty - clean))
+    assert devs["mean"] > 0.1            # the attack actually bites
+    for agg in ("median", "trimmed_mean", "norm_bound"):
+        assert devs[agg] < 0.9 * devs["mean"], (attack, agg, devs)
+    if attack == "scale":
+        # model-replacement-style boost: mean diverges, robust holds
+        assert devs["mean"] > 1.0
+        for agg in ("median", "trimmed_mean", "norm_bound"):
+            assert devs[agg] < 0.25 * devs["mean"], (agg, devs)
+
+
+def test_attack_corrupts_only_byzantine_rows():
+    """Honest rows pass through the attack select bit-unchanged; the
+    flagged rows carry exactly the advertised corruption."""
+    flags = byzantine_flags(C, BYZ, seed=0)
+    assert sum(flags) == round(BYZ * C)
+    u = jnp.asarray(np.random.default_rng(1).normal(size=(C, 5)), jnp.float32)
+    flipped = np.asarray(UpdateAttack("sign_flip", flags)(u))
+    scaled = np.asarray(UpdateAttack("scale", flags, scale=25.0)(u))
+    for i, f in enumerate(flags):
+        if f:
+            np.testing.assert_array_equal(flipped[i], -np.asarray(u)[i])
+            np.testing.assert_array_equal(scaled[i], 25.0 * np.asarray(u)[i])
+        else:
+            np.testing.assert_array_equal(flipped[i], np.asarray(u)[i])
+            np.testing.assert_array_equal(scaled[i], np.asarray(u)[i])
+    # deterministic per (seed, fraction); different seeds move the set
+    assert byzantine_flags(C, BYZ, seed=0) == flags
+    assert any(byzantine_flags(C, BYZ, seed=s) != flags for s in range(1, 8))
+
+
+@pytest.mark.parametrize("engine", ["map", "shard_map"])
+@pytest.mark.parametrize("name,kw", [
+    ("median-q75", dict(aggregator="median", participation=0.75)),
+    ("trimmed-topk", dict(aggregator="trimmed_mean", trim_fraction=0.25,
+                          compressor="topk", compression_ratio=0.25)),
+    ("normbound", dict(aggregator="norm_bound", norm_bound_factor=2.0)),
+    ("secure-q50", dict(secure_agg=True, participation=0.5)),
+    ("signflip", dict(attack="sign_flip", byzantine_fraction=BYZ)),
+], ids=["median-q75", "trimmed-topk", "normbound", "secure-q50", "signflip"])
+def test_engine_parity_under_adversarial_settings(engine, name, kw):
+    """vmap / map / shard_map agree under every adversarial setting — the
+    shard_map all_gather full-view path computes the same reduction as the
+    single-device engines (same participant sets, same masks, same
+    byzantine rows)."""
+    ref = _run(_spec(engine="vmap", **kw), rounds=2)
+    got = _run(_spec(engine=engine, **kw), rounds=2)
+    for a, b in zip(jax.tree.leaves(ref.params), jax.tree.leaves(got.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(ref.rho, got.rho)
+
+
+# ---------------------------------------------------------------------------
+# gate 4: accounting soundness
+# ---------------------------------------------------------------------------
+
+def test_adversarial_knobs_leave_local_ledger_unchanged():
+    """Robust aggregation and secure masking change the aggregate, not the
+    executed per-client mechanism: the rho ledger is byte-identical to the
+    plain spec's under the same participation draw."""
+    base = _run(_spec(participation=0.5))
+    for kw in (dict(aggregator="median"), dict(secure_agg=True),
+               dict(attack="sign_flip", byzantine_fraction=BYZ)):
+        got = _run(_spec(participation=0.5, **kw))
+        np.testing.assert_array_equal(base.rho, got.rho)
+
+
+def test_central_accounting_scales_rho_by_exactly_one_over_p():
+    """dp_accounting='central' divides every realized per-step charge by
+    the participant count P — engine key unchanged (accounting-only), all
+    four ledger surfaces consistent because they share accounting_q()."""
+    from repro.api import round_rho_charges
+    local = _spec(secure_agg=True, participation=0.5)
+    central = local.replace(dp_accounting="central")
+    assert central.engine_key() == local.engine_key()
+    p = local.participants_per_round()
+    assert central.accounting_q() == pytest.approx(local.accounting_q() / p)
+    np.testing.assert_allclose(round_rho_charges(central),
+                               round_rho_charges(local) / p, rtol=1e-12)
+    s_l, s_c = _run(local), _run(central)
+    np.testing.assert_allclose(s_c.rho, s_l.rho / p, rtol=1e-12)
+    # composes multiplicatively with participation amplification
+    amp = central.replace(amplify_participation=True)
+    assert amp.accounting_q() == pytest.approx(
+        local.replace(amplify_participation=True).accounting_q() / p)
+
+
+def test_central_accounting_requires_secure_agg():
+    with pytest.raises(ValueError):
+        _spec(dp_accounting="central")
+
+
+# ---------------------------------------------------------------------------
+# spec surface
+# ---------------------------------------------------------------------------
+
+def test_adversarial_spec_validation():
+    with pytest.raises(ValueError):
+        _spec(aggregator="krum")
+    with pytest.raises(ValueError):
+        _spec(aggregator="trimmed_mean", trim_fraction=0.5)
+    with pytest.raises(ValueError):
+        _spec(aggregator="norm_bound", norm_bound_factor=0.0)
+    with pytest.raises(ValueError):
+        _spec(secure_agg=True, secure_frac_bits=0)
+    with pytest.raises(ValueError):        # median of a sum it never sees
+        _spec(secure_agg=True, aggregator="median")
+    with pytest.raises(ValueError):
+        _spec(attack="gradient_theft")
+    with pytest.raises(ValueError):        # zero scale silently drops rows
+        _spec(attack="scale", byzantine_fraction=BYZ, attack_scale=0.0)
+    with pytest.raises(ValueError):
+        _spec(attack="sign_flip", byzantine_fraction=1.0)
+    with pytest.raises(ValueError):        # update attacks are resident-only
+        _spec(attack="sign_flip", byzantine_fraction=BYZ,
+              population=64, cohort_size=C)
+    with pytest.raises(ValueError):        # async bypasses the pipeline seam
+        _spec(aggregator="median", engine="async_buffered")
+    with pytest.raises(ValueError):
+        _spec(aggregator="median", topology="local_only")
+    # adversarial knobs alone switch the pipeline on
+    assert _spec(aggregator="median").has_pipeline()
+    assert _spec(secure_agg=True).has_pipeline()
+    assert not _spec().has_pipeline()
+
+
+def test_make_aggregator_and_attack_factories():
+    assert make_aggregator("mean") is None
+    assert isinstance(make_aggregator("median"), CoordinateMedian)
+    assert isinstance(make_aggregator("trimmed_mean", 0.2), TrimmedMean)
+    assert isinstance(make_aggregator("norm_bound", 0.1, 2.0), NormBound)
+    assert make_attack("none", (1, 1)) is None
+    assert make_attack("sign_flip", (0,) * C) is None       # all honest
+    assert isinstance(make_attack("sign_flip", (1, 0)), UpdateAttack)
+
+
+# ---------------------------------------------------------------------------
+# satellite: property tests on the robust reductions
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), p=st.integers(3, 9), d=st.integers(1, 6),
+       trim=st.floats(0.0, 0.45))
+def test_robust_aggregators_permutation_invariant_and_bounded(seed, p, d,
+                                                              trim):
+    """For ANY participant matrix: shuffling the rows never changes a
+    robust aggregate (client order is protocol noise), and every output
+    coordinate stays inside [min, max] of that coordinate's inputs — the
+    boundedness that caps what a byzantine minority can inject."""
+    rng = np.random.default_rng(seed)
+    u = jnp.asarray(rng.normal(scale=rng.uniform(0.1, 10.0), size=(p, d)),
+                    jnp.float32)
+    perm = jnp.asarray(rng.permutation(p))
+    for agg in (CoordinateMedian(), TrimmedMean(trim), NormBound(2.0)):
+        out = np.asarray(agg(u))
+        out_perm = np.asarray(agg(u[perm]))
+        np.testing.assert_allclose(out_perm, out, rtol=1e-5, atol=1e-6)
+        lo = np.min(np.asarray(u), axis=0) - 1e-6
+        hi = np.max(np.asarray(u), axis=0) + 1e-6
+        assert np.all(out >= lo) and np.all(out <= hi), type(agg).__name__
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), p=st.integers(2, 7))
+def test_participant_rows_gathers_exactly_the_masked_rows(seed, p):
+    """participant_rows extracts precisely the mask's P participant rows
+    (any P-subset, any order), on which every aggregator then operates."""
+    rng = np.random.default_rng(seed)
+    u = jnp.asarray(rng.normal(size=(C, 4)), jnp.float32)
+    chosen = np.sort(rng.choice(C, size=min(p, C), replace=False))
+    mask = np.zeros((C,), np.float32)
+    mask[chosen] = 1.0
+    rows = np.asarray(participant_rows(u, jnp.asarray(mask), len(chosen)))
+    np.testing.assert_array_equal(rows, np.asarray(u)[chosen])
+
+
+# ---------------------------------------------------------------------------
+# population-mode poisoning: malicious vids, data-level label flip
+# ---------------------------------------------------------------------------
+
+def test_malicious_population_poisons_only_byzantine_vids():
+    """The wrapper flips exactly the byzantine vids' labels, leaves
+    features bit-unchanged everywhere, is deterministic per (vid, seed),
+    and is the identity at fraction zero."""
+    from repro.population import (
+        POPULATION_ATTACKS, is_byzantine_vid, malicious_population,
+        synthetic_population)
+    m, frac, seed = 64, 0.25, 5
+    base = synthetic_population(m, dim=DIM, batch_size=B)
+    mal = malicious_population(base, byzantine_fraction=frac, seed=seed)
+    ident = malicious_population(base, byzantine_fraction=0.0, seed=seed)
+    assert mal.n_clients == base.n_clients
+    assert "label_flip" in mal.name
+    flags = [is_byzantine_vid(v, frac, seed) for v in range(m)]
+    assert any(flags) and not all(flags)
+    # membership is a pure function of (vid, fraction, seed)
+    assert flags == [is_byzantine_vid(v, frac, seed) for v in range(m)]
+    for vid in range(0, m, 7):
+        want = base.sampler(vid, TAU, np.random.default_rng((1, vid)))
+        got = mal.sampler(vid, TAU, np.random.default_rng((1, vid)))
+        same = ident.sampler(vid, TAU, np.random.default_rng((1, vid)))
+        np.testing.assert_array_equal(got["x"], want["x"])
+        np.testing.assert_array_equal(same["y"], want["y"])
+        if flags[vid]:
+            np.testing.assert_array_equal(got["y"], 1 - want["y"])
+        else:
+            np.testing.assert_array_equal(got["y"], want["y"])
+    assert POPULATION_ATTACKS == ("label_flip",)
+    with pytest.raises(ValueError):           # update attacks are resident-only
+        malicious_population(base, attack="sign_flip")
+    with pytest.raises(ValueError):
+        malicious_population(base, n_classes=1)
+
+
+def test_malicious_population_composes_with_cohort_round():
+    """A cohort round over the poisoned population runs end to end and
+    differs from the clean round only through the poisoned shards (same
+    rho ledger: data poisoning never touches the privacy accounting)."""
+    from repro.population import (
+        init_population_state, malicious_population, run_cohort_round,
+        synthetic_population)
+    m = 32
+    pspec = _spec(n_clients=4, sigmas=(0.3,) * 4, batch_sizes=(B,) * 4,
+                  population=m, cohort_size=4)
+    base = synthetic_population(m, dim=DIM, batch_size=B)
+    mal = malicious_population(base, byzantine_fraction=0.5, seed=1)
+    outs = {}
+    for tag, pop in [("clean", base), ("poisoned", mal)]:
+        st_p = init_population_state(pspec, init_linear(DIM))
+        rng = np.random.default_rng(0)
+        for _ in range(2):
+            st_p, rec = run_cohort_round(pspec, st_p, pop, rng,
+                                         check_budgets=False)
+        outs[tag] = (st_p, rec)
+    clean, poisoned = outs["clean"][0], outs["poisoned"][0]
+    assert float(outs["clean"][1]["loss"]) != float(outs["poisoned"][1]["loss"])
+    np.testing.assert_array_equal(np.asarray(clean.store.rho),
+                                  np.asarray(poisoned.store.rho))
+
+
+# ---------------------------------------------------------------------------
+# CI smoke leg (REPRO_SMOKE_ATTACK): the benchmark's robust-beats-mean gate
+# ---------------------------------------------------------------------------
+
+@pytest.mark.skipif(not os.environ.get("REPRO_SMOKE_ATTACK"),
+                    reason="set REPRO_SMOKE_ATTACK=1 to run the attack-"
+                           "resilience benchmark smoke gate in this env")
+def test_attack_resilience_benchmark_smoke(tmp_path):
+    """benchmarks/attack_resilience.py --smoke --check passes: on the
+    reduced config, every robust aggregator's post-attack accuracy stays
+    within the gate of its clean run while the mean degrades more."""
+    out = tmp_path / "BENCH_attack.json"
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(repo, "src"))
+    proc = subprocess.run(
+        [sys.executable, os.path.join(repo, "benchmarks",
+                                      "attack_resilience.py"),
+         "--smoke", "--check", "--out", str(out)],
+        capture_output=True, text=True, env=env, timeout=1200)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert out.exists()

@@ -1,0 +1,186 @@
+"""Host-level secure-aggregation protocol tests (repro.core.secureagg).
+
+Property tests (hypothesis, or the tests/_hypothesis_compat shim) pin the
+protocol's load-bearing algebra for ARBITRARY cohorts and dropout sets:
+
+* pairwise masks are antisymmetric and telescope to zero over any cohort;
+* the server's masked survivor sum equals the plain fixed-point survivor
+  sum EXACTLY — under any dropout subset, any vid numbering, any round;
+* quantization (the one lossy step) is bounded by the grid pitch.
+
+Plus the composition the tentpole promises: a secure round over a
+:class:`repro.population.HeterogeneousCohort` draw, with the sampler's
+mid-round dropouts as the protocol's dropped set.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.secureagg import (
+    MODULUS,
+    central_rho_scale,
+    dropout_correction,
+    fp_decode,
+    fp_encode,
+    masked_update,
+    pairwise_mask,
+    secure_aggregate,
+    unmasked_fixed_point_sum,
+    validate_secure,
+)
+from repro.population import HeterogeneousCohort
+
+
+def _updates(vids, dim, seed, scale=4.0):
+    rng = np.random.default_rng(seed)
+    return {int(v): rng.normal(scale=scale, size=dim) for v in vids}
+
+
+# ---------------------------------------------------------------------------
+# fixed-point codec
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), frac_bits=st.integers(1, 24))
+def test_fp_codec_roundtrip_error_bounded_by_grid(seed, frac_bits):
+    """encode->decode moves a value by at most half the grid pitch
+    2^-frac_bits — quantization is the protocol's entire error budget."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(scale=10.0, size=64)
+    back = fp_decode(fp_encode(x, frac_bits), frac_bits)
+    assert np.max(np.abs(back - x)) <= 0.5 / (1 << frac_bits) + 1e-12
+    # on-grid values roundtrip exactly
+    grid = np.round(x * (1 << frac_bits)) / (1 << frac_bits)
+    np.testing.assert_array_equal(
+        fp_decode(fp_encode(grid, frac_bits), frac_bits), grid)
+
+
+def test_validate_secure_bounds():
+    validate_secure(1)
+    validate_secure(24)
+    for bad in (0, 25, -3):
+        with pytest.raises(ValueError):
+            validate_secure(bad)
+
+
+# ---------------------------------------------------------------------------
+# mask algebra
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), vi=st.integers(0, 500),
+       vj=st.integers(0, 500), rnd=st.integers(0, 100))
+def test_pairwise_masks_antisymmetric(seed, vi, vj, rnd):
+    """m_ij + m_ji == 0 (mod 2^32) for every pair, seed and round — the
+    single identity the whole telescoping cancellation rests on; and masks
+    are fresh per round."""
+    if vi == vj:
+        with pytest.raises(ValueError):
+            pairwise_mask(seed, vi, vj, rnd, 8)
+        return
+    a = pairwise_mask(seed, vi, vj, rnd, 8).astype(np.int64)
+    b = pairwise_mask(seed, vj, vi, rnd, 8).astype(np.int64)
+    np.testing.assert_array_equal((a + b) % MODULUS, 0)
+    assert not np.array_equal(a, pairwise_mask(seed, vi, vj, rnd + 1, 8)
+                              .astype(np.int64))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), m=st.integers(2, 40),
+       k=st.integers(2, 12), n_drop=st.integers(0, 10),
+       rnd=st.integers(0, 50), dim=st.integers(1, 16))
+def test_masked_sum_equals_unmasked_sum_any_cohort_any_dropout(
+        seed, m, k, n_drop, rnd, dim):
+    """THE protocol identity, quantified over arbitrary vid subsets of an
+    M-population, arbitrary dropout subsets (all but one survivor), and
+    arbitrary rounds: the server's masked survivor sum — dropout-recovery
+    correction included — equals the plain fixed-point survivor sum with
+    ZERO tolerance."""
+    rng = np.random.default_rng((seed, 0xC0))
+    k = min(k, m)
+    cohort = np.sort(rng.choice(m, size=k, replace=False))
+    dropped = rng.permutation(cohort)[:min(n_drop, k - 1)]
+    updates = _updates(cohort, dim, seed)
+    survivors = [v for v in cohort if v not in set(int(d) for d in dropped)]
+    got = secure_aggregate(updates, cohort, seed, rnd, dropped=dropped)
+    want = unmasked_fixed_point_sum(updates, survivors)
+    np.testing.assert_array_equal(got, want)
+    # ...and the decoded sum is the true float sum up to k quantizations
+    true = np.sum([updates[v] for v in survivors], axis=0)
+    assert np.max(np.abs(got - true)) <= len(survivors) * 0.5 / (1 << 16)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), k=st.integers(2, 10),
+       dim=st.integers(1, 12))
+def test_dropout_correction_is_exactly_the_mask_residue(seed, k, dim):
+    """The reconstructed correction equals, term by term, the pair masks
+    the survivors carried against the dropped — and vanishes when nothing
+    dropped."""
+    cohort = list(range(k))
+    dropped = cohort[: k // 2]
+    survivors = cohort[k // 2:]
+    corr = dropout_correction(survivors, dropped, seed, 0, dim)
+    want = np.zeros(dim, np.int64)
+    for i in survivors:
+        for j in dropped:
+            want = (want + pairwise_mask(seed, i, j, 0, dim)) % MODULUS
+    np.testing.assert_array_equal(corr.astype(np.int64), want)
+    np.testing.assert_array_equal(
+        dropout_correction(survivors, (), seed, 0, dim), 0)
+
+
+def test_masked_upload_hides_the_plaintext():
+    """A single client's upload with >= 1 partner is mask-dominated: it
+    differs from the plain encoding, changes when the partner set changes,
+    and two rounds' uploads of the SAME update are unrelated."""
+    u = np.full((64,), 0.25)
+    plain = fp_encode(u)
+    a = masked_update(u, 0, (0, 1, 2), seed=7, round_idx=0)
+    b = masked_update(u, 0, (0, 1, 3), seed=7, round_idx=0)
+    c = masked_update(u, 0, (0, 1, 2), seed=7, round_idx=1)
+    assert not np.array_equal(a, plain)
+    assert not np.array_equal(a, b)
+    assert not np.array_equal(a, c)
+
+
+def test_secure_aggregate_validates_membership():
+    updates = _updates(range(4), 8, 0)
+    with pytest.raises(ValueError):          # dropped outside the cohort
+        secure_aggregate(updates, range(4), 0, 0, dropped=(9,))
+    with pytest.raises(ValueError):          # everyone dropped
+        secure_aggregate(updates, range(4), 0, 0, dropped=range(4))
+    with pytest.raises(ValueError):
+        central_rho_scale(0)
+    assert central_rho_scale(8) == pytest.approx(1 / 8)
+
+
+# ---------------------------------------------------------------------------
+# composition with the PR-5 heterogeneous-fleet model
+# ---------------------------------------------------------------------------
+
+def test_secure_round_over_heterogeneous_cohort_draw():
+    """End-to-end fleet round: HeterogeneousCohort picks the round's K
+    vids under Beta-availability; its dropout model (clients lost
+    mid-round) supplies the protocol's dropped set; the masked sum equals
+    the unmasked survivor sum exactly, every round."""
+    m, k, dim, seed = 40, 8, 12, 3
+    sampler = HeterogeneousCohort(seed=seed, dropout=0.3)
+    rng = np.random.default_rng(seed)
+    saw_dropout = False
+    for rnd in range(6):
+        cohort = sampler(rnd, m, k)
+        assert len(cohort) == k
+        # the sampler backfills dropped slots to keep K static; re-derive
+        # a mid-round dropout set over the realized cohort for the uplink
+        # loss the protocol must absorb
+        dropped = cohort[rng.random(k) < 0.3][: k - 1]
+        saw_dropout = saw_dropout or len(dropped) > 0
+        updates = _updates(cohort, dim, (seed, rnd))
+        got = secure_aggregate(updates, cohort, seed, rnd, dropped=dropped)
+        survivors = [v for v in cohort
+                     if v not in set(int(d) for d in dropped)]
+        np.testing.assert_array_equal(
+            got, unmasked_fixed_point_sum(updates, survivors))
+    assert saw_dropout                       # the recovery path really ran
