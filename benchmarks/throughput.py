@@ -27,7 +27,30 @@ and the device-resident block bytes of a K = 8 cohort as the virtual
 population M grows 10^3 -> 10^6. Both must be flat in M — the population
 drivers gather only the sampled cohort, so M buys scenario scale, not
 device memory or dispatch cost. ``--check`` gates the byte-flatness
-exactly and the rounds/s within a noise margin.
+exactly and the rounds/s within a noise margin. Cohort rows now carry an
+honest ``host_syncs_per_round``: the chunk-boundary path is NOT the dense
+fused driver's 1/chunk — each chunk pays the stacked-mask fetch plus the
+ClientStore residual gather and scatter-back materialize, i.e. 3/chunk
+under a pipeline spec. A companion **resident-cohort** scenario times the
+same M = 10^5 workload through ``train_population(...,
+resident_cache=S)`` (PR 8): sticky state and stationary data shards live
+on device, cohorts are drawn per round inside the scan, and the
+steady-state chunk makes zero blocking host syncs. ``--check`` pins the
+resident row's ``host_syncs_per_round == 0`` and its rounds/s against the
+chunk-boundary baseline (noise margin; the committed full-grid JSON shows
+it strictly ahead).
+
+A **kernel roofline** section projects the measured kernels onto the TPU
+v5e roofline of :mod:`repro.utils.roofline`: for the qsgd
+``quantize_decompress`` kernel and the PR-8 ``cohort_gather_scatter``
+kernel, each probe-available backend is timed on a fixed shape and the
+row reports analytic FLOPs/bytes, achieved GFLOP/s and GB/s on this
+host, the v5e roofline bound (t_compute vs t_memory, bottleneck term),
+and the headroom factor ``wall / v5e_bound`` — how far this backend on
+this host sits above what the target part's roofline admits. Both
+kernels are streaming (O(1) flops/byte), so ``--check`` gates that every
+row's projected bottleneck is the memory term — a compute-bound verdict
+means the analytic model (or the kernel) regressed.
 
 A third scenario tracks **buffered-async federation** (repro.asyncfl) on
 a heterogeneous straggler fleet: the simulated seconds to land a target
@@ -50,6 +73,7 @@ import json
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.api import FederationSpec, init_state, train
@@ -60,6 +84,7 @@ from repro.asyncfl import (
     sync_round_duration,
     train_async,
 )
+from repro.kernels.dispatch import backend_works, get_kernel
 from repro.models.linear import init_linear, logreg_loss
 from repro.optim import sgd
 from repro.population import (
@@ -70,6 +95,7 @@ from repro.population import (
     synthetic_population,
     train_population,
 )
+from repro.utils.roofline import HBM_BW, RooflineTerms
 
 # fixed CPU reference federation: small enough that driver overhead (the
 # thing this benchmark tracks) dominates — per-round host cost is fixed
@@ -139,35 +165,75 @@ def time_driver(spec: FederationSpec, rounds: int, chunk_rounds: int,
 
 
 def time_cohort_driver(m: int, rounds: int, chunk_rounds: int,
-                       repeats: int) -> dict:
+                       repeats: int, resident: int = 0) -> dict:
     """Cohort-scaling row: train a K = C cohort drawn from M virtual
     clients (fused chunks, topk pipeline so the ClientStore residual path
     is on the clock) and record rounds/s plus the device-resident block
-    bytes — both must be independent of M."""
+    bytes — both must be independent of M.
+
+    ``resident=S`` routes the same workload through the PR-8
+    device-resident driver (``resident_cache=S``, stationary population so
+    the data shards cache on device too): per-round cohorts inside the
+    fused scan, zero blocking host syncs per steady-state chunk.
+    """
+    spec, pop = _cohort_workload(m, resident)
+    _cohort_run(spec, pop, max(1, chunk_rounds), chunk_rounds,
+                resident)                       # compile warm-up
+    wall = min(_cohort_run(spec, pop, rounds, chunk_rounds, resident)
+               for _ in range(repeats))
+    return _cohort_row(spec, pop, m, rounds, chunk_rounds, resident, wall)
+
+
+def _cohort_workload(m: int, resident: int):
     spec = reference_spec("vmap", "topk", 1.0).replace(population=m,
                                                        cohort_size=C)
-    pop = synthetic_population(m, dim=DIM, batch_size=BATCH, seed=0)
+    pop = synthetic_population(m, dim=DIM, batch_size=BATCH, seed=0,
+                               stationary=bool(resident))
+    return spec, pop
 
-    def one_run(n_rounds: int) -> float:
-        ps = init_population_state(spec, init_linear(DIM))
-        t0 = time.perf_counter()
-        ps, out = train_population(spec, ps, pop, max_rounds=n_rounds,
-                                   chunk_rounds=chunk_rounds)
-        jax.block_until_ready(ps.fl.params)
-        assert out["rounds"] == n_rounds
-        return time.perf_counter() - t0
 
-    one_run(max(1, chunk_rounds))               # compile warm-up
-    wall = min(one_run(rounds) for _ in range(repeats))
+def _cohort_run(spec, pop, n_rounds: int, chunk_rounds: int,
+                resident: int) -> float:
+    ps = init_population_state(spec, init_linear(DIM))
+    t0 = time.perf_counter()
+    ps, out = train_population(spec, ps, pop, max_rounds=n_rounds,
+                               chunk_rounds=chunk_rounds,
+                               resident_cache=resident)
+    jax.block_until_ready(ps.fl.params)
+    assert out["rounds"] == n_rounds
+    return time.perf_counter() - t0
+
+
+def _cohort_row(spec, pop, m: int, rounds: int, chunk_rounds: int,
+                resident: int, wall: float) -> dict:
     ps = init_population_state(spec, init_linear(DIM))
     batch = cohort_batch(spec, pop, UniformCohort(spec.seed)(0, m, C),
                          np.random.default_rng(0))
-    return {
+    # honest driver-structural sync count. The chunk-boundary cohort path
+    # is NOT the dense fused driver's 1/chunk: each chunk blocks on the
+    # stacked participation-mask fetch (pipeline spec) AND pays the
+    # ClientStore hop — residual gather when building the device block,
+    # residual materialize at scatter-back — so 3 per chunk. The resident
+    # driver keeps residuals/rho/data on device and, under full
+    # within-cohort participation, the mask is the deterministic all-ones
+    # constant (never fetched): zero forced syncs per steady-state chunk.
+    # Partial participation would reintroduce the 1/chunk mask fetch.
+    if resident:
+        syncs = (0.0 if spec.participation_fraction() >= 1.0
+                 else 1.0 / chunk_rounds)
+    else:
+        syncs = ((1.0 if spec.has_pipeline() else 0.0) + 2.0) / chunk_rounds
+    row = {
+        "mode": "resident" if resident else "chunk_boundary",
         "population": m, "cohort_size": C, "chunk_rounds": chunk_rounds,
         "rounds": rounds, "wall_s": round(wall, 4),
         "rounds_per_s": round(rounds / wall, 2),
+        "host_syncs_per_round": round(syncs, 4),
         "device_block_bytes": device_block_bytes(ps, batch),
     }
+    if resident:
+        row["resident_cache"] = resident
+    return row
 
 
 def run_cohort_scaling(smoke: bool) -> list[dict]:
@@ -181,8 +247,142 @@ def run_cohort_scaling(smoke: bool) -> list[dict]:
         rows.append(r)
         print(f"population M={m:<9,} K={C} chunk={chunk:<3} "
               f"{r['rounds_per_s']:>8.1f} rounds/s "
-              f"({r['device_block_bytes']:,} device bytes)")
+              f"({r['host_syncs_per_round']:.3f} syncs/round, "
+              f"{r['device_block_bytes']:,} device bytes)")
     return rows
+
+
+def run_resident_cohort(smoke: bool) -> dict:
+    """Resident-vs-chunk-boundary head-to-head at M = 10^5, K = 8.
+
+    Both drivers are timed with INTERLEAVED repeats (best-of each) on the
+    same round count (longer than the scaling rows — the ratio is the
+    deliverable, so per-run fixed costs must not dominate). The baseline
+    fixes ONE cohort per chunk and pays the 3 ClientStore syncs at every
+    boundary; the resident row runs ``resident_cache=S`` with a
+    stationary population so sticky state AND data rows are
+    device-resident, cohorts are drawn per round INSIDE the fused scan,
+    and the steady-state chunk makes no blocking host sync at all.
+
+    chunk_rounds is deliberately asymmetric: for the resident driver it is
+    a pure execution detail — the realized cohort schedule is per-round at
+    ANY chunk_rounds (finer than the baseline offers at any setting) — so
+    it runs at its natural larger chunk, which the zero-sync property is
+    exactly what makes safe. The baseline stays at the scaling rows'
+    chunk: raising it would coarsen its cohort schedule further, trading
+    fidelity for speed rather than comparing drivers.
+    """
+    m = 100_000
+    rounds, repeats = (32, 3) if smoke else (64, 5)
+    chunk_base, chunk_res = 8, 32
+    cache = chunk_res * C               # S = 256: one full chunk of warm slots
+    spec_b, pop_b = _cohort_workload(m, 0)
+    spec_r, pop_r = _cohort_workload(m, cache)
+    _cohort_run(spec_b, pop_b, chunk_base, chunk_base, 0)       # compile
+    _cohort_run(spec_r, pop_r, chunk_res, chunk_res, cache)
+    # INTERLEAVED repeats, best-of each: machine-state noise (scheduler,
+    # allocator phase) lands on both drivers alike instead of biasing
+    # whichever ran second — the ratio is the deliverable here
+    walls_b, walls_r = [], []
+    for _ in range(repeats):
+        walls_b.append(_cohort_run(spec_b, pop_b, rounds, chunk_base, 0))
+        walls_r.append(_cohort_run(spec_r, pop_r, rounds, chunk_res, cache))
+    base = _cohort_row(spec_b, pop_b, m, rounds, chunk_base, 0,
+                       min(walls_b))
+    res = _cohort_row(spec_r, pop_r, m, rounds, chunk_res, cache,
+                      min(walls_r))
+    speedup = res["rounds_per_s"] / base["rounds_per_s"]
+    print(f"resident   M={m:<9,} K={C} S={cache:<4} "
+          f"{res['rounds_per_s']:>8.1f} rounds/s "
+          f"({res['host_syncs_per_round']:.3f} syncs/round, "
+          f"{speedup:.2f}x chunk-boundary)")
+    return {"baseline": base, "resident": res,
+            "speedup_resident_vs_chunk": round(speedup, 2)}
+
+
+# analytic per-call roofline terms for the streamed kernels. Coarse HLO-level
+# op counts, deliberately simple: quantize_decompress reads x and u and
+# writes the dequantized y (3 f32 arrays, 12N bytes) and spends ~6 flops per
+# element (abs-max reduction, normalize, scale, jitter-add, floor, dequant);
+# cohort gather is a pure row copy — K*D read + K*D write, zero flops — so
+# its roofline position is memory-bound by construction.
+def _kernel_scenarios(smoke: bool) -> list[dict]:
+    n = 1 << 16 if smoke else 1 << 20
+    s_rows, d = (128, 256) if smoke else (512, 4096)
+    key = jax.random.PRNGKey(0)
+    kx, ku, kc = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (n,), jnp.float32)
+    u = jax.random.uniform(ku, (n,), jnp.float32)
+    cachemat = jax.random.normal(kc, (s_rows, d), jnp.float32)
+    slots = jnp.asarray(np.arange(0, s_rows, s_rows // C)[:C], jnp.int32)
+    return [
+        {"kernel": "quantize_decompress",
+         "shape": f"N={n}", "args": (x, u),
+         "call": lambda impl: (lambda x_, u_: impl(x_, u_, 4)),
+         "flops": 6.0 * n, "hbm_bytes": 12.0 * n},
+        {"kernel": "cohort_gather_scatter",
+         "shape": f"S={s_rows} K={C} D={d}", "args": (cachemat, slots),
+         "call": lambda impl: (lambda c_, s_: impl(c_, s_)),
+         "flops": 0.0, "hbm_bytes": 2.0 * C * d * 4.0},
+    ]
+
+
+def run_kernel_roofline(smoke: bool) -> dict:
+    """Achieved-vs-peak per kernel backend, projected on the v5e roofline.
+
+    Each probe-available backend is timed (best-of-repeats, many calls per
+    timing to amortize dispatch) on a fixed shape; the row pairs the
+    achieved GFLOP/s / GB/s on THIS host with the v5e roofline bound for
+    the same analytic FLOPs/bytes. ``headroom_vs_v5e`` = measured wall /
+    roofline bound: how many times slower this backend+host runs than the
+    target part's roofline admits (1.0 would be a roofline-saturating
+    kernel on real hardware).
+    """
+    iters, repeats = (5, 2) if smoke else (20, 3)
+    rows = []
+    for sc in _kernel_scenarios(smoke):
+        for backend in ("pallas", "interpret", "ref"):
+            if not backend_works(sc["kernel"], backend):
+                continue
+            if backend == "interpret" and not smoke:
+                # interpret mode executes the kernel body block-by-block as
+                # jax ops (~100x the oracle on CPU); time it at the smoke
+                # shape only so the full grid stays minutes, not hours
+                continue
+            fn = jax.jit(sc["call"](get_kernel(sc["kernel"], backend)))
+            out = fn(*sc["args"])
+            jax.block_until_ready(out)          # compile warm-up
+            best = float("inf")
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                for _ in range(iters):
+                    out = fn(*sc["args"])
+                jax.block_until_ready(out)
+                best = min(best, (time.perf_counter() - t0) / iters)
+            terms = RooflineTerms(flops=sc["flops"],
+                                  hbm_bytes=sc["hbm_bytes"], coll_bytes=0.0)
+            bound = max(terms.t_compute, terms.t_memory)
+            row = {
+                "kernel": sc["kernel"], "backend": backend,
+                "shape": sc["shape"],
+                "flops": sc["flops"], "hbm_bytes": sc["hbm_bytes"],
+                "wall_us": round(best * 1e6, 2),
+                "achieved_gflop_s": round(sc["flops"] / best / 1e9, 2),
+                "achieved_gb_s": round(sc["hbm_bytes"] / best / 1e9, 2),
+                "fraction_of_v5e_hbm_bw": round(
+                    sc["hbm_bytes"] / best / HBM_BW, 6),
+                "v5e_bound_us": round(bound * 1e6, 4),
+                "v5e_bottleneck": ("compute" if terms.t_compute
+                                   > terms.t_memory else "memory"),
+                "headroom_vs_v5e": round(best / bound, 1),
+                "v5e_roofline": terms.as_dict(),
+            }
+            rows.append(row)
+            print(f"roofline {sc['kernel']:22s} {backend:9s} {sc['shape']:18s}"
+                  f" {row['wall_us']:>10.1f} us  {row['achieved_gb_s']:>8.2f}"
+                  f" GB/s ({row['headroom_vs_v5e']}x off v5e "
+                  f"{row['v5e_bottleneck']} roof)")
+    return {"iters": iters, "repeats": repeats, "rows": rows}
 
 
 def run_async_hetero(smoke: bool) -> dict:
@@ -261,6 +461,7 @@ def run_grid(smoke: bool) -> dict:
         top = max(k for k in sel if k > 1)
         speedups[f"{engine}/{compressor}/q{participation}"] = round(
             sel[top] / base, 2)
+    cohort_rows = run_cohort_scaling(smoke)
     return {
         "bench": "throughput",
         "config": {"n_clients": C, "tau": TAU, "dim": DIM, "batch": BATCH,
@@ -269,7 +470,9 @@ def run_grid(smoke: bool) -> dict:
         "device": str(jax.devices()[0]),
         "results": results,
         "speedup_fused_vs_per_round": speedups,
-        "cohort_scaling": run_cohort_scaling(smoke),
+        "cohort_scaling": cohort_rows,
+        "resident_cohort": run_resident_cohort(smoke),
+        "kernel_roofline": run_kernel_roofline(smoke),
         "async_hetero": run_async_hetero(smoke),
     }
 
@@ -319,6 +522,37 @@ def main(argv=None) -> int:
         if slow_pop:
             print(f"REGRESSION: cohort rounds/s degrades with M: {slow_pop}")
             return 1
+        # resident cohort: the sync count is exact (0 is the whole point of
+        # the device-resident driver — any nonzero means a forced fetch
+        # crept back into the steady-state chunk). Throughput: the full
+        # grid demands resident >= chunk-boundary outright (interleaved
+        # best-of-5 timing makes that stable locally); the CI smoke run on
+        # shared runners keeps a noise margin like the fused gate above
+        rc = report["resident_cohort"]
+        if rc["resident"]["host_syncs_per_round"] != 0:
+            print(f"REGRESSION: resident driver reports host syncs: "
+                  f"{rc['resident']}")
+            return 1
+        rc_margin = 0.85 if report["config"]["smoke"] else 1.0
+        if (rc["resident"]["rounds_per_s"]
+                < rc_margin * rc["baseline"]["rounds_per_s"]):
+            print(f"REGRESSION: resident driver slower than the "
+                  f"chunk-boundary path: {rc}")
+            return 1
+        # kernel roofline: both streamed kernels must be covered and every
+        # row must project memory-bound on v5e — these kernels do O(1)
+        # flops per byte, so a compute-bound verdict means the analytic
+        # model (or the kernel itself) regressed
+        kr = report["kernel_roofline"]["rows"]
+        covered = {r["kernel"] for r in kr}
+        if not {"quantize_decompress", "cohort_gather_scatter"} <= covered:
+            print(f"REGRESSION: kernel roofline rows missing: {covered}")
+            return 1
+        off_roof = [r for r in kr if r["v5e_bottleneck"] != "memory"]
+        if off_roof:
+            print(f"REGRESSION: streamed kernel projects compute-bound: "
+                  f"{off_roof}")
+            return 1
         # async vs sync simulated time: strict — the event schedule is
         # deterministic (no wall-clock noise), and on a ~7x-spread fleet
         # the buffered driver must beat the barrier outright
@@ -331,6 +565,9 @@ def main(argv=None) -> int:
               f"(speedups: {report['speedup_fused_vs_per_round']}); "
               f"cohort scaling flat over M "
               f"({[r['population'] for r in rows]}); "
+              f"resident cohort 0 syncs/round at "
+              f"{rc['speedup_resident_vs_chunk']}x chunk-boundary; "
+              f"roofline memory-bound for {sorted(covered)}; "
               f"async {ah['sim_speedup']}x sync in simulated seconds")
     return 0
 

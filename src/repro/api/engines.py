@@ -245,4 +245,58 @@ def chunked_round_fn_for(spec: FederationSpec) -> RoundFn:
                    build)
 
 
+_RESIDENT_FN_CACHE: dict[tuple, RoundFn] = {}
+
+
+def resident_chunked_round_fn_for(spec: FederationSpec,
+                                  data_resident: bool = False) -> RoundFn:
+    """The jitted fused scan for the *resident-cohort* population path: the
+    engine's pipeline round body wrapped by
+    :func:`repro.core.fl.make_resident_chunked_round` — per-round cohort
+    slot indices threaded into the scan, error-feedback residual gathered
+    from / scattered into the device-resident (S, D) cohort cache via the
+    ``cohort_gather_scatter`` kernel. Signature::
+
+        fn(params, opt_state, batches, slots, key, sigmas, cache)
+            -> (params, opt_state, key, cache, metrics, masks)
+
+    Donation covers params / opt_state / cache (argnums 0, 1, 6): the
+    resident cache updates in place across chunks, like the dense path's
+    residual. ``data_resident=True`` selects the stationary-population
+    form — ``batches`` becomes the warm-shard (S, tau, B, ...) cache
+    pytree, NOT donated (it persists across chunks), and each round's
+    batch is gathered from it inside the scan. Cached per (engine key,
+    participant count, data_resident) like :func:`chunked_round_fn_for`;
+    jit's shape cache handles S and R. Non-pipeline population specs have
+    no device-resident sticky state — their resident driver reuses
+    :func:`chunked_round_fn_for` directly, so this builder refuses them
+    rather than compile a dead cache operand.
+    """
+    from repro.core.fl import make_resident_chunked_round
+
+    if spec.is_async():
+        raise ValueError(
+            "engine='async_buffered' has no fused sync scan: drive it with "
+            "repro.asyncfl.train_async")
+    if not spec.has_pipeline():
+        raise ValueError(
+            "resident_chunked_round_fn_for is the pipeline (compressed /"
+            " partial-participation) form; without a pipeline there is no "
+            "device-resident sticky state — use chunked_round_fn_for")
+
+    def build():
+        raw = get_engine(resolve_engine(spec))(spec)
+        chunk = make_resident_chunked_round(
+            raw, n_clients=spec.n_clients,
+            n_participants=spec.participants_per_round(),
+            kernel_backend=spec.kernel_backend,
+            data_resident=data_resident)
+        return jax.jit(chunk, donate_argnums=(0, 1, 6))
+
+    return _cached(_RESIDENT_FN_CACHE,
+                   (spec.engine_key(), spec.participants_per_round(),
+                    data_resident),
+                   build)
+
+
 assert set(ENGINES) - {"auto"} == set(_REGISTRY), "built-in engines drifted"

@@ -231,6 +231,87 @@ def make_chunked_round(round_fn: Callable, *, pipeline: bool = False,
     return chunk_fn
 
 
+def make_resident_chunked_round(round_fn: Callable, *, n_clients: int,
+                                n_participants: int,
+                                kernel_backend: str = "auto",
+                                data_resident: bool = False) -> Callable:
+    """:func:`make_chunked_round`'s pipeline form with a *fresh cohort per
+    round*: the per-round cohorts' cache-slot indices are threaded into the
+    scan as a stacked operand, and the error-feedback residual lives in the
+    device-resident (S, D) cohort cache instead of a (K, D) carry (§Perf
+    opt — the resident-population driver of
+    :mod:`repro.population.resident`).
+
+        chunk_fn(params, opt_state, batches, slots, key, sigmas, cache)
+            -> (params, opt_state, key, cache, metrics, masks)
+
+    ``batches`` leaves are (R, K, tau, B, ...), ``slots`` is the (R, K)
+    int32 per-round cohort -> cache-slot map (host-precomputed from the
+    same stateless ``(seed, round_idx)`` draw the per-round driver uses, so
+    both drivers realize the identical cohort schedule), and ``cache`` is
+    the (S, D) resident residual block. Each round gathers its cohort's K
+    rows out of the cache, runs the unchanged pipeline round body with
+    run_round's exact key-split schedule, and scatters the updated rows
+    back — both movements through the fused ``cohort_gather_scatter``
+    kernel (:mod:`repro.kernels.dispatch`), pure device ops: the chunk
+    never blocks on the host for sticky state.
+
+    ``data_resident=True`` is the stationary-population form: ``batches``
+    is then the (S, tau, B, ...) warm-shard cache pytree (a scan constant,
+    not a scanned operand) and each round's (K, tau, B, ...) batch is
+    gathered from it by slot through the same kernel — the chunk reads NO
+    per-round host-built data at all. Only exact when every client's shard
+    is fixed (``ClientPopulation.stationary``); fresh-per-round sampling
+    populations must stream ``batches`` as the stacked operand."""
+    from repro.core.aggregation import participation_mask
+    from repro.kernels.dispatch import resolve_backend
+    from repro.kernels.ops import cohort_gather, cohort_scatter
+
+    # resolve eagerly, at build time: capability probes cannot run inside
+    # the traced scan body (dispatch's trace-state guard would silently
+    # demote auto to ref there)
+    kernel_backend = resolve_backend("cohort_gather_scatter",
+                                     kernel_backend or "auto")
+
+    def chunk_fn(params, opt_state, batches, slots, key, sigmas, cache):
+        def gather_shards(slot):
+            # rows of every (S, ...) leaf for this round's cohort, moved by
+            # the same slot-indexed kernel as the residual (leaves flatten
+            # to (S, prod) row blocks; reshape is free)
+            def one(x):
+                rows = cohort_gather(x.reshape((x.shape[0], -1)), slot,
+                                     backend=kernel_backend)
+                return rows.reshape((slot.shape[0],) + x.shape[1:])
+            return jax.tree.map(one, batches)
+
+        def body(carry, operand):
+            if data_resident:
+                slot = operand
+                batch = gather_shards(slot)
+            else:
+                batch, slot = operand
+            p, s, k, c = carry
+            k, sub = jax.random.split(k)
+            sub, mask_key = jax.random.split(sub)
+            mask = participation_mask(mask_key, n_clients, n_participants)
+            # participation-only pipelines have no error-feedback state:
+            # the cache carry is None (an empty pytree) and the round body
+            # takes/returns residual=None, exactly like the dense form
+            r = (cohort_gather(c, slot, backend=kernel_backend)
+                 if c is not None else None)
+            p, s, r, ms = round_fn(p, s, batch, sub, sigmas, mask, r)
+            if c is not None:
+                c = cohort_scatter(c, slot, r, backend=kernel_backend)
+            return (p, s, k, c), (ms, mask)
+
+        xs = slots if data_resident else (batches, slots)
+        (params, opt_state, key, cache), (ms, masks) = jax.lax.scan(
+            body, (params, opt_state, key, cache), xs)
+        return params, opt_state, key, cache, ms, masks
+
+    return chunk_fn
+
+
 @dataclass
 class Budgets:
     """Per-device budgets of the optimal-design problem (paper §5.3)."""

@@ -1,0 +1,109 @@
+"""Fused cohort gather/scatter over the device-resident shard cache.
+
+The resident-cohort driver (:mod:`repro.population.resident`) keeps the
+sticky per-client state of S "warm" virtual clients as a device block —
+the (S, D) error-feedback residual cache — and draws a fresh cohort of K
+slot indices every round inside the fused ``lax.scan``. The per-round
+boundary then needs exactly two data movements, both expressed here as one
+Pallas kernel pair instead of host numpy:
+
+* **gather**: ``rows = cache[slots]`` — the cohort's K rows pulled into the
+  round's (K, D) block;
+* **scatter**: ``cache[slots] = rows`` — the round's updated rows written
+  back in place (``input_output_aliases`` pins the cache buffer, so the
+  scan carry never double-buffers the S-row cache).
+
+Both are pure row copies — no arithmetic — so every backend (mosaic,
+interpret, jnp oracle) is bit-identical by construction; the dispatch
+probe checks exact equality, not tolerance.
+
+Implementation: the slot vector rides as a *scalar-prefetch* operand
+(``pltpu.PrefetchScalarGridSpec``), available to the BlockSpec index maps
+before the body runs — the canonical TPU pattern for index-driven gathers
+(the block for grid step i is ``cache[slots[i]]``, DMA'd directly; no
+one-hot matmul, no full-cache stream). Grid is (K,): one row block per
+sampled cohort slot, so the kernel touches K*D elements of the S*D cache.
+
+TPU tiling caveat: row blocks are (1, D) with D padded to the 128-lane
+boundary; sublane-1 blocks relayout on some mosaic versions — the
+dispatch probe demotes to interpret/ref where the compiled form is
+unavailable, which is also the expected CPU path in this container.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_LANES = 128
+
+
+def _pad_lanes(x: jax.Array) -> jax.Array:
+    """Pad the trailing dim up to the 128-lane boundary (zeros)."""
+    d = x.shape[-1]
+    rem = (-d) % _LANES
+    if rem == 0:
+        return x
+    return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, rem)])
+
+
+def _gather_kernel(slots_ref, cache_ref, out_ref):
+    del slots_ref                  # consumed by the index maps
+    out_ref[...] = cache_ref[...]
+
+
+def _scatter_kernel(slots_ref, rows_ref, cache_ref, out_ref):
+    del slots_ref, cache_ref       # cache is aliased into out
+    out_ref[...] = rows_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cohort_gather_scatter(cache, slots, rows=None, *, interpret: bool = False):
+    """Gather (``rows=None``) or scatter rows of the (S, D) cohort cache.
+
+    gather:  ``cohort_gather_scatter(cache, slots)`` -> (K, D) rows
+    scatter: ``cohort_gather_scatter(cache, slots, rows)`` -> (S, D) cache'
+
+    ``slots`` is the cohort's (K,) int32 cache-slot vector — unique by the
+    cohort-sampler contract, so the scatter is order-independent. The
+    scatter aliases the cache operand into the output: under jit/scan the
+    S-row cache updates in place (§Perf opt — the whole point of keeping
+    the warm set resident).
+    """
+    s, d = cache.shape
+    k = slots.shape[0]
+    slots = slots.astype(jnp.int32)
+    padded = _pad_lanes(cache)
+    dp = padded.shape[-1]
+    if rows is None:
+        out = pl.pallas_call(
+            _gather_kernel,
+            grid_spec=pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=1,
+                grid=(k,),
+                in_specs=[pl.BlockSpec((1, dp), lambda i, slots: (slots[i], 0))],
+                out_specs=pl.BlockSpec((1, dp), lambda i, slots: (i, 0)),
+            ),
+            out_shape=jax.ShapeDtypeStruct((k, dp), cache.dtype),
+            interpret=interpret,
+        )(slots, padded)
+        return out[:, :d]
+    out = pl.pallas_call(
+        _scatter_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(k,),
+            in_specs=[pl.BlockSpec((1, dp), lambda i, slots: (i, 0)),
+                      pl.BlockSpec((1, dp), lambda i, slots: (slots[i], 0))],
+            out_specs=pl.BlockSpec((1, dp), lambda i, slots: (slots[i], 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((s, dp), cache.dtype),
+        # operand order is (slots, rows, cache): alias the cache (input 2)
+        # into the output so the resident block updates in place
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(slots, _pad_lanes(rows), padded)
+    return out[:, :d]

@@ -275,7 +275,23 @@ def _mamba2_ssd_probe(impl) -> bool:
     return _close(got, _ref.mamba2_ssd_ref(x, dt, a, b_in, c_in), tol=1e-3)
 
 
+def _cohort_gather_scatter_oracle(cache, slots, rows=None, **_tuning):
+    return _ref.cohort_gather_scatter_ref(cache, slots, rows)
+
+
+def _cohort_gather_scatter_probe(impl) -> bool:
+    cache = jnp.arange(9 * 5, dtype=jnp.float32).reshape(9, 5)
+    slots = jnp.asarray([7, 0, 4], jnp.int32)
+    rows = -jnp.arange(3 * 5, dtype=jnp.float32).reshape(3, 5)
+    got_g = impl(cache, slots)
+    got_s = impl(cache, slots, rows)
+    return (_close(got_g, _ref.cohort_gather_scatter_ref(cache, slots))
+            and _close(got_s,
+                       _ref.cohort_gather_scatter_ref(cache, slots, rows)))
+
+
 def _register_builtins() -> None:
+    from repro.kernels.cohort_gather import cohort_gather_scatter
     from repro.kernels.dp_clip_noise import dp_clip_noise
     from repro.kernels.flash_attention import flash_attention
     from repro.kernels.mamba2_ssd import mamba2_ssd
@@ -293,6 +309,9 @@ def _register_builtins() -> None:
                     ref=_rwkv6_scan_oracle, probe=_rwkv6_scan_probe)
     register_kernel("mamba2_ssd", pallas=mamba2_ssd,
                     ref=_mamba2_ssd_oracle, probe=_mamba2_ssd_probe)
+    register_kernel("cohort_gather_scatter", pallas=cohort_gather_scatter,
+                    ref=_cohort_gather_scatter_oracle,
+                    probe=_cohort_gather_scatter_probe)
 
 
 _register_builtins()

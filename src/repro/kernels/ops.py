@@ -64,6 +64,18 @@ def quantize_decompress_flat(x, u, bits: int, block: int = DEFAULT_BLOCK,
     return get_kernel("quantize_decompress", backend)(x, u, bits, block=block)
 
 
+def cohort_gather(cache, slots, backend: str = "auto"):
+    """Gather the cohort's (K, D) rows out of the (S, D) resident cache."""
+    return get_kernel("cohort_gather_scatter", backend)(cache, slots)
+
+
+def cohort_scatter(cache, slots, rows, backend: str = "auto"):
+    """Scatter the cohort's updated (K, D) rows back into the (S, D)
+    resident cache (in place under jit: the pallas form aliases the cache
+    operand, the oracle is a donated ``.at[slots].set``)."""
+    return get_kernel("cohort_gather_scatter", backend)(cache, slots, rows)
+
+
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                     block_q: int = 128, block_k: int = 128,
                     backend: str = "auto"):

@@ -83,3 +83,17 @@ def mamba2_ssd_ref(x, dt, a, b_in, c_in, h0=None):
 
     state, ys = jax.lax.scan(step, h0, jnp.arange(s))
     return jnp.moveaxis(ys, 0, 1), state
+
+
+def cohort_gather_scatter_ref(cache, slots, rows=None):
+    """Cohort row gather/scatter oracle (exact, no arithmetic).
+
+    gather (``rows=None``): (S, D) cache x (K,) slots -> (K, D) rows.
+    scatter: writes ``rows`` over the slot rows -> updated (S, D) cache.
+    Slots are unique by the cohort contract, so the scatter order never
+    matters and every backend is bit-identical.
+    """
+    slots = slots.astype(jnp.int32)
+    if rows is None:
+        return jnp.take(cache, slots, axis=0)
+    return cache.at[slots].set(rows)

@@ -215,6 +215,15 @@ def main(argv=None):
     ap.add_argument("--cohort-size", type=int, default=0,
                     help="per-round cohort size K (population mode; "
                          "default: --clients)")
+    ap.add_argument("--resident-cache", type=int, default=0,
+                    help="S > 0 keeps a device-resident shard cache of S "
+                         "warm virtual clients (repro.population.resident): "
+                         "a fresh cohort is drawn every round inside the "
+                         "fused scan (the per-round schedule, unlike plain "
+                         "--chunk-rounds population runs which fix one "
+                         "cohort per chunk) and steady-state chunks make "
+                         "zero blocking host syncs; needs --population and "
+                         "--chunk-rounds > 1, and S >= chunk_rounds * K")
     ap.add_argument("--cohort-hetero", action="store_true",
                     help="sample cohorts under the Beta-availability + "
                          "dropout heterogeneity model instead of uniform "
@@ -332,7 +341,8 @@ def main(argv=None):
         state, out = train_population(spec, state, pop,
                                       cohort_sampler=cohort_sampler,
                                       max_rounds=args.rounds,
-                                      chunk_rounds=args.chunk_rounds)
+                                      chunk_rounds=args.chunk_rounds,
+                                      resident_cache=args.resident_cache)
     else:
         state, out = train(spec, state, sampler, max_rounds=args.rounds,
                            chunk_rounds=args.chunk_rounds)
@@ -362,6 +372,8 @@ def main(argv=None):
                 int((state.store.rounds_participated > 0).sum()),
             "distinct_participants": int((state.store.rho > 0).sum()),
         })
+        if "resident_cache" in out:
+            summary["resident_cache"] = out["resident_cache"]
     print(json.dumps(summary, indent=2))
     if args.save:
         extra = {"history": out["history"], **federation_meta(spec)}

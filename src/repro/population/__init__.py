@@ -22,6 +22,14 @@ with the model.
 With M == C and cohort == population this path is bit-for-bit the dense
 ``repro.api`` participation path (the identity gate of
 tests/test_population.py).
+
+``train_population(..., resident_cache=S)`` upgrades the fused chunks to
+*device-resident* cohort execution (:mod:`repro.population.resident`): S
+warm clients' sticky state — and, for stationary populations, their data
+shards — stay on device, a fresh cohort is drawn every round INSIDE the
+fused scan (the per-round driver's exact schedule), and the steady-state
+chunk makes zero blocking host syncs under full within-cohort
+participation.
 """
 from repro.population.attacks import (
     POPULATION_ATTACKS,
@@ -33,6 +41,11 @@ from repro.population.population import (
     population_from_federated,
     population_from_sampler,
     synthetic_population,
+)
+from repro.population.resident import (
+    ResidentCache,
+    init_resident_cache,
+    run_resident_rounds,
 )
 from repro.population.runtime import (
     PopulationState,
@@ -53,6 +66,7 @@ from repro.population.samplers import (
     CohortSampler,
     HeterogeneousCohort,
     UniformCohort,
+    chunk_cohorts,
 )
 from repro.population.store import ClientStore
 
@@ -65,6 +79,7 @@ __all__ = [
     "load_population_state", "peek_population_epsilon",
     "rounds_within_population_budgets", "run_cohort_round",
     "run_cohort_rounds", "save_population_state", "train_population",
-    "CohortSampler", "HeterogeneousCohort", "UniformCohort",
+    "ResidentCache", "init_resident_cache", "run_resident_rounds",
+    "CohortSampler", "HeterogeneousCohort", "UniformCohort", "chunk_cohorts",
     "ClientStore",
 ]

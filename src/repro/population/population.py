@@ -46,10 +46,20 @@ class ClientPopulation:
     ``repro.api.round_batch``, with ``vid`` ranging over the whole
     population [0, n_clients). It must be cheap to call for any vid without
     touching the other M-1 clients.
+
+    ``stationary=True`` declares the sampler IGNORES its ``rng`` — every
+    call for a vid returns the same fixed shard (the on-device-dataset IoT
+    regime). That is the contract that lets the resident-cohort driver
+    (:mod:`repro.population.resident`) keep warm clients' data rows on
+    device across rounds exactly: a cached shard equals what streaming
+    would have rebuilt, bit for bit, and no shared-rng stream is consumed.
+    Fresh-per-round sampling populations must leave it False — their data
+    stream depends on call order and cannot be cached without changing it.
     """
     n_clients: int                  # M (population size)
     sampler: Sampler
     name: str = ""
+    stationary: bool = False
 
     def __post_init__(self):
         if self.n_clients <= 0:
@@ -71,17 +81,22 @@ def population_from_federated(fed, batch_size: int) -> ClientPopulation:
 
 
 def population_from_sampler(n_clients: int, sampler: Sampler,
-                            name: str = "") -> ClientPopulation:
+                            name: str = "",
+                            stationary: bool = False) -> ClientPopulation:
     """Adapt an existing lazy ``sampler(client, tau, rng)`` (token streams,
-    custom loaders) whose client axis already scales to ``n_clients``."""
-    return ClientPopulation(n_clients=n_clients, sampler=sampler, name=name)
+    custom loaders) whose client axis already scales to ``n_clients``.
+    Pass ``stationary=True`` only if the sampler ignores ``rng`` (see
+    :class:`ClientPopulation`)."""
+    return ClientPopulation(n_clients=n_clients, sampler=sampler, name=name,
+                            stationary=stationary)
 
 
 def synthetic_population(n_clients: int, dim: int = 20, batch_size: int = 8,
                          n_classes: int = 2, alpha: float = 0.5,
                          client_shift: float = 1.0, noise: float = 0.8,
                          label_strength: float = 0.9,
-                         seed: int = 0) -> ClientPopulation:
+                         seed: int = 0,
+                         stationary: bool = False) -> ClientPopulation:
     """M virtual clients with Dirichlet(alpha) label skew, fully lazy.
 
     Population-level structure (class directions, the label signal) is drawn
@@ -96,6 +111,12 @@ def synthetic_population(n_clients: int, dim: int = 20, batch_size: int = 8,
     batches plug straight into ``repro.models.linear.logreg_loss``. Features
     are normalized to the unit ball (paper §4 assumption), matching
     :mod:`repro.data.synthetic`.
+
+    ``stationary=True`` draws each client's shard from its own ``(seed,
+    vid)`` generator instead of the shared round rng — the client re-reads
+    one fixed local dataset every round (and the shared stream is never
+    consumed), which is the contract the resident-cohort driver needs to
+    cache warm data rows on device (see :class:`ClientPopulation`).
     """
     if n_classes < 2:
         raise ValueError(f"n_classes must be >= 2, got {n_classes}")
@@ -110,13 +131,16 @@ def synthetic_population(n_clients: int, dim: int = 20, batch_size: int = 8,
         vrng = np.random.default_rng((seed, int(vid)))
         p = vrng.dirichlet([alpha] * n_classes)
         shift = vrng.normal(size=dim) / np.sqrt(dim) * client_shift
-        y = rng.choice(n_classes, size=(tau, batch_size), p=p)
-        x = rng.normal(scale=noise, size=(tau, batch_size, dim))
+        draw = vrng if stationary else rng
+        y = draw.choice(n_classes, size=(tau, batch_size), p=p)
+        x = draw.normal(scale=noise, size=(tau, batch_size, dim))
         x += shift
         x += class_dirs[y] * label_strength
         norms = np.linalg.norm(x, axis=-1, keepdims=True)
         x = (x / np.maximum(norms, 1.0)).astype(np.float32)
         return {"x": x, "y": y.astype(np.int32)}
 
+    tag = "-fixed" if stationary else ""
     return ClientPopulation(n_clients=n_clients, sampler=sampler,
-                            name=f"dirichlet{alpha}-M{n_clients}")
+                            name=f"dirichlet{alpha}-M{n_clients}{tag}",
+                            stationary=stationary)

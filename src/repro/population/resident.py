@@ -1,0 +1,479 @@
+"""Device-resident cohort execution: a warm-client shard cache + per-round
+cohorts inside the fused scan (§Perf opt — ISSUE 8 tentpole).
+
+The chunk-boundary driver of :mod:`repro.population.runtime` fixes ONE
+cohort per fused chunk because the cohort's sticky state (error-feedback
+residual rows, per-vid rho) lives in the host :class:`ClientStore` and a
+per-round cohort change would force a host gather/scatter round trip every
+round. This module removes that constraint by keeping a **resident cache**
+of S >> K warm virtual clients on device:
+
+* **residual** — an (S, D) f32 device block, the warm clients'
+  error-feedback rows. Write-back: rows move host-ward only on eviction or
+  :meth:`ResidentCache.flush` (both as *lazy* device slices — nothing
+  blocks until the flush actually materializes them).
+* **rho** — an (S,) f64 host vector. The zCDP ledger is exact host math by
+  repo convention, so "resident" here means *write-through*: charged
+  during the chunk replay, flushed to the store at every chunk boundary
+  (free of device syncs — it never lived on device).
+* **data** — optionally, the warm clients' (S, tau, B, ...) shard block on
+  device. Only exact when the population declares itself ``stationary``
+  (the sampler ignores its rng — each client re-reads a fixed local
+  shard, the typical IoT regime); fresh-per-round sampling populations
+  keep streaming host-built batches, which draw from the shared rng in
+  per-round order and therefore cannot be cached across rounds without
+  changing the realized data stream.
+
+With the warm set resident, :func:`run_resident_rounds` draws a **fresh
+cohort every round inside the fused ``lax.scan``**: the per-round cohorts
+come from the same stateless ``(seed, round_idx)`` draw the per-round
+driver makes (:func:`repro.population.samplers.chunk_cohorts`), their vids
+are mapped to cache slots on the host, and the (R, K) slot plan rides into
+the scan where the ``cohort_gather_scatter`` kernel moves rows between the
+cache and the round's K-block as pure device ops. Chunked and per-round
+drivers therefore realize the SAME cohort schedule — the gap the
+chunk-boundary driver documented — and the steady-state chunk makes **zero
+blocking host syncs** under full within-cohort participation (partial
+participation keeps run_rounds' one stacked-mask fetch per chunk: the
+conditional ledger needs the realized sets).
+
+Exactness contract (the PR-5 identity gate, extended): the store round-trip
+preserves f32 bits, the kernel is a pure row copy on every backend, and the
+host ledger replay mirrors the per-round driver's float operations
+expression by expression (same repeated adds, same np.max / zcdp_to_dp /
+``_population_epsilon_fix`` order, a running mirror of the store's monotone
+``_max_rho``). So the resident path is bit-identical to the per-round
+cohort driver on the same schedule — params, opt_state, rho, residual,
+resource_spent — for any S, any eviction churn; and with M == C, cohort ==
+population, S == M it is bit-identical to the dense engines (the degenerate
+slot map is the identity). tests/test_population.py and
+tests/test_seed_sweep.py pin both.
+
+The store stays authoritative between chunks for everything except the
+warm residual rows; :meth:`ResidentCache.flush` (called by
+``train_population`` before returning, and by anything that wants to
+checkpoint) restores full authority.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.engines import chunked_round_fn_for, resident_chunked_round_fn_for
+from repro.api.spec import FederationSpec
+from repro.api.state import (
+    PrefetchFailed,
+    _raise_budget,
+    round_rho_charges,
+    sigmas_for,
+)
+from repro.core.privacy import zcdp_to_dp
+from repro.kernels.ops import cohort_gather
+from repro.population.population import ClientPopulation
+from repro.population.samplers import CohortSampler, chunk_cohorts
+from repro.population.store import ClientStore
+
+
+# fused promotion updates (one dispatch per chunk instead of one per device
+# block), module-level so every cache instance shares the jit compile cache.
+# The residual and data slot sets differ — evicted-then-repromoted vids keep
+# a pending residual row but always re-land their (stationary, reproducible)
+# data row. Donating the old blocks keeps promotion allocation-neutral.
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _promote_with_data(residual, data, slr, rrows, sld, drows):
+    return (residual.at[slr].set(rrows),
+            jax.tree.map(lambda c, r: c.at[sld].set(r), data, drows))
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _promote_residual(residual, slr, rrows):
+    return residual.at[slr].set(rrows)
+
+
+@jax.jit
+def _unstack_metrics(ms):
+    """Split the scan's stacked (R, ...) metric leaves into R per-round
+    views in ONE dispatch (the eager per-round ``v[r]`` slicing was a
+    dispatch per key per round — measurable at chunk granularity). The
+    outputs stay lazy device scalars; nothing blocks."""
+    return jax.tree.map(lambda v: tuple(v), ms)
+
+
+class ResidentCache:
+    """The warm-client shard cache (see module docstring).
+
+    Host half: ``vids`` (S,) int64 slot->vid map (-1 empty), ``slot_of``
+    its inverse, ``rho`` (S,) f64 write-through ledger rows, ``last_used``
+    LRU stamps. Device half: ``residual`` (S, D) f32 write-back rows (None
+    for non-pipeline specs — no sticky device state) and optionally
+    ``data``, the warm shards' (S, tau, B, ...) pytree (stationary
+    populations only). ``pending`` holds evicted residual rows as lazy
+    references ``vid -> (batch, row)`` into per-eviction (n, D) device
+    gathers until :meth:`flush` materializes them — eviction itself is one
+    device gather per batch of victims and never blocks the host.
+    """
+
+    def __init__(self, capacity: int, residual_dim: int | None = None,
+                 data_template: Any = None):
+        if capacity <= 0:
+            raise ValueError(f"capacity must be positive, got {capacity}")
+        self.capacity = int(capacity)
+        self.residual_dim = residual_dim
+        self.vids = np.full((self.capacity,), -1, np.int64)
+        self.slot_of: dict[int, int] = {}
+        self.last_used = np.zeros((self.capacity,), np.int64)
+        self.rho = np.zeros((self.capacity,), np.float64)
+        self.residual = (jnp.zeros((self.capacity, residual_dim), jnp.float32)
+                         if residual_dim is not None else None)
+        self.data = (jax.tree.map(
+            lambda x: jnp.zeros((self.capacity,) + x.shape, x.dtype),
+            data_template) if data_template is not None else None)
+        self.pending: dict[int, tuple[jax.Array, int]] = {}
+        self.clock = 0
+        self.stats = {"hits": 0, "misses": 0, "evictions": 0, "flushes": 0}
+
+    def warm_count(self) -> int:
+        return len(self.slot_of)
+
+    def _stamp(self, vids: np.ndarray) -> None:
+        self.clock += 1
+        idx = np.asarray([self.slot_of[int(v)] for v in vids], np.int64)
+        self.last_used[idx] = self.clock
+
+    def ensure_resident(self, store: ClientStore, vids: np.ndarray, *,
+                        population: ClientPopulation | None = None,
+                        tau: int | None = None,
+                        data_rows: dict[int, Any] | None = None) -> None:
+        """Promote ``vids`` into the cache, evicting LRU slots not in the
+        incoming set. All device movement is lazy: evicted residual rows
+        become pending device slices, promoted rows land with one batched
+        ``.at[slots].set`` — no host sync. ``data_rows`` optionally
+        supplies pre-materialized shards for cold vids (the prefetch path
+        of ``train_population``); missing ones fall back to the sampler.
+        """
+        vids = np.unique(np.asarray(vids, np.int64))
+        if vids.size > self.capacity:
+            raise ValueError(
+                f"chunk needs {vids.size} distinct warm clients but the "
+                f"resident cache holds {self.capacity}; raise "
+                f"--resident-cache or lower chunk_rounds (a chunk can touch "
+                f"up to chunk_rounds * K distinct vids)")
+        need = [int(v) for v in vids if int(v) not in self.slot_of]
+        self.stats["hits"] += int(vids.size) - len(need)
+        self.stats["misses"] += len(need)
+        if need:
+            needed = {int(v) for v in vids}
+            free = [int(s) for s in np.flatnonzero(self.vids < 0)]
+            if len(free) < len(need):
+                lru = sorted(
+                    (int(self.last_used[s]), int(s))
+                    for s in np.flatnonzero(self.vids >= 0)
+                    if int(self.vids[s]) not in needed)
+                free += [s for _, s in lru[:len(need) - len(free)]]
+            victims = [s for s in free if self.vids[s] >= 0]
+            if self.residual is not None and victims:
+                # write-back without a sync: ONE lazy device gather of the
+                # victims' rows, referenced per-vid as (batch, row) until
+                # flush() materializes the batch — no per-victim dispatch
+                vrows = self.residual[np.asarray(victims, np.int32)]
+                for j, s in enumerate(victims):
+                    self.pending[int(self.vids[s])] = (vrows, j)
+            for s in victims:
+                del self.slot_of[int(self.vids[s])]
+                self.vids[s] = -1
+            self.stats["evictions"] += len(victims)
+            slots_new = free[:len(need)]
+            need_arr = np.asarray(need, np.int64)
+            slots_arr = np.asarray(slots_new, np.int64)
+            self.vids[slots_arr] = need_arr
+            for v, s in zip(need, slots_new):
+                self.slot_of[v] = s
+            # rho is write-through: between chunks the store is
+            # authoritative, so promotion is a plain host read
+            self.rho[slots_arr] = store.rho[need_arr]
+            # cold residual rows come out of the store in ONE batched
+            # gather; re-promoted pending rows (evicted earlier, sampled
+            # again before a flush) are sliced out of their lazy eviction
+            # batches — the rare path, kept out of the fused update
+            cold = [v for v in need if v not in self.pending]
+            warm = [v for v in need if v in self.pending]
+            if self.residual is not None:
+                sl_cold = np.asarray([self.slot_of[v] for v in cold],
+                                     np.int32)
+                rrows = store.gather_residual(np.asarray(cold, np.int64))
+            if self.data is not None:
+                if population is None or tau is None:
+                    raise ValueError("data-resident promotion needs the "
+                                     "population and tau")
+                throwaway = np.random.default_rng(0)
+                shards = []
+                for v in need:
+                    got = None if data_rows is None else data_rows.get(v)
+                    if got is None:
+                        # stationary contract: the sampler ignores its rng,
+                        # so a throwaway generator re-derives the client's
+                        # fixed shard without touching the shared stream
+                        got = population.sampler(int(v), tau, throwaway)
+                    shards.append(got)
+                drows = jax.tree.map(lambda *xs: np.stack(xs), *shards)
+                self.residual, self.data = _promote_with_data(
+                    self.residual, self.data, sl_cold, rrows,
+                    np.asarray(slots_new, np.int32), drows)
+            elif self.residual is not None:
+                self.residual = _promote_residual(self.residual, sl_cold,
+                                                  rrows)
+            if self.residual is not None and warm:
+                sl = np.asarray([self.slot_of[v] for v in warm], np.int32)
+                rows = [self.pending.pop(v) for v in warm]
+                self.residual = self.residual.at[sl].set(
+                    jnp.stack([batch[j] for batch, j in rows]))
+        self._stamp(vids)
+
+    def slots_for(self, cohorts: np.ndarray) -> np.ndarray:
+        """Map an (R, K) vid plan to its (R, K) int32 cache-slot plan."""
+        flat = np.asarray([self.slot_of[int(v)]
+                           for v in np.asarray(cohorts).ravel()], np.int32)
+        return flat.reshape(np.asarray(cohorts).shape)
+
+    def flush(self, store: ClientStore) -> None:
+        """Materialize every warm + pending residual row into the store and
+        write the warm rho rows through — after this the store is fully
+        authoritative again (checkpoint-safe). The one deliberate blocking
+        sync of the resident path; rho and the slot map are host-only."""
+        self.stats["flushes"] += 1
+        occ = np.flatnonzero(self.vids >= 0)
+        if self.residual is not None:
+            if occ.size:
+                rows = np.asarray(
+                    self.residual[np.asarray(occ, np.int32)])
+                store.scatter_residual(self.vids[occ], rows)
+            if self.pending:
+                vids = np.asarray(sorted(self.pending), np.int64)
+                # materialize each eviction batch once, then pick rows
+                mat: dict[int, np.ndarray] = {}
+
+                def _row(batch, j):
+                    if id(batch) not in mat:
+                        mat[id(batch)] = np.asarray(batch)
+                    return mat[id(batch)][j]
+
+                rows = np.stack([_row(*self.pending[int(v)]) for v in vids])
+                store.scatter_residual(vids, rows)
+                self.pending.clear()
+        if occ.size:
+            store.scatter_rho(self.vids[occ], self.rho[occ])
+
+    def reset(self) -> None:
+        """Drop all residency (after a flush): slots empty, device arrays
+        kept allocated. Stale rows are never read — gathers only touch
+        slots in ``slot_of`` and promotion overwrites before use."""
+        self.vids.fill(-1)
+        self.slot_of.clear()
+        self.last_used.fill(0)
+        self.clock = 0
+
+
+def init_resident_cache(spec: FederationSpec, pstate,
+                        capacity: int,
+                        population: ClientPopulation | None = None,
+                        ) -> ResidentCache:
+    """Build the resident cache for ``spec``: capacity clamped to
+    min(capacity, M), residual block sized from the store, and the data
+    block allocated iff the population declares ``stationary`` (and the
+    spec has a pipeline — the data-resident scan variant is the pipeline
+    form; streaming batches otherwise)."""
+    if not spec.is_population():
+        raise ValueError("resident caches need a population spec "
+                         "(FederationSpec(population=M, cohort_size=K))")
+    capacity = min(int(capacity), spec.population)
+    if capacity < spec.n_clients:
+        raise ValueError(f"resident cache capacity {capacity} < cohort "
+                         f"size {spec.n_clients}")
+    data_template = None
+    if (population is not None and population.stationary
+            and spec.has_pipeline()):
+        shard = population.sampler(0, spec.tau, np.random.default_rng(0))
+        data_template = jax.tree.map(np.asarray, shard)
+    return ResidentCache(capacity,
+                         residual_dim=pstate.store.residual_dim,
+                         data_template=data_template)
+
+
+def run_resident_rounds(spec: FederationSpec, pstate,
+                        population: ClientPopulation, rng,
+                        cache: ResidentCache,
+                        n_rounds: int | None = None,
+                        cohort_sampler: CohortSampler | None = None,
+                        check_budgets: bool = True,
+                        cohorts: np.ndarray | None = None,
+                        batches: Any = None,
+                        data_rows: dict[int, Any] | None = None,
+                        prefetch: Callable[[], None] | None = None,
+                        ) -> tuple[Any, list[dict]]:
+    """A fused chunk of R rounds with a FRESH COHORT PER ROUND (§Perf opt).
+
+    The per-round cohorts are ``chunk_cohorts(sampler, rounds_done, R)`` —
+    the identical stateless schedule the per-round driver realizes — their
+    union is promoted into ``cache``, and the (R, K) slot plan rides into
+    the fused scan where the ``cohort_gather_scatter`` kernel moves
+    residual rows cache<->round-block as pure device ops. Steady-state host
+    syncs per chunk: ZERO under full within-cohort participation (the
+    all-slots participation mask is deterministic, so the ledger replays
+    without fetching it), ONE stacked-mask fetch otherwise.
+
+    ``batches`` may be passed pre-built with leaves (R, K, tau, B, ...) in
+    per-round cohort order (the prefetch path); for data-resident caches
+    (stationary populations) batches must be None — the scan gathers each
+    round's shards from the cache instead. Bit-identical to R sequential
+    ``run_cohort_round`` calls; raises/returns like ``run_cohort_rounds``
+    (donation consumes the input state's device buffers; ``PrefetchFailed``
+    carries the completed PopulationState)."""
+    from repro.population import runtime as rt
+
+    sampler = rt._resolve_cohort_sampler(spec, cohort_sampler)
+    if spec.is_async():
+        raise ValueError("resident execution is a synchronous-cohort "
+                         "driver; async specs use repro.asyncfl")
+    if cohorts is None:
+        if n_rounds is None or n_rounds <= 0:
+            raise ValueError(f"n_rounds must be positive, got {n_rounds}")
+        cohorts = chunk_cohorts(sampler, pstate.fl.rounds_done, n_rounds,
+                                spec.population, spec.n_clients)
+    cohorts = np.asarray(cohorts)
+    if n_rounds is None:
+        n_rounds = int(cohorts.shape[0])
+    if cohorts.shape[0] != n_rounds:
+        raise ValueError(f"n_rounds={n_rounds} != cohort plan leading axis "
+                         f"{cohorts.shape[0]}")
+    # row 0 through the standard single-cohort check (spec/population/shape
+    # errors), the remaining rows vectorized — per-row python checks were
+    # measurable at chunk granularity
+    rt._check_cohort(spec, population, cohorts[0])
+    if cohorts.ndim != 2 or cohorts.shape[1] != spec.n_clients:
+        raise ValueError(f"cohort plan has shape {cohorts.shape}, expected "
+                         f"({n_rounds}, {spec.n_clients})")
+    srt = np.sort(cohorts, axis=1)
+    if np.any(srt[:, 1:] == srt[:, :-1]):
+        raise ValueError("cohort vids must be unique within each round")
+    if cohorts.min() < 0 or cohorts.max() >= spec.population:
+        raise ValueError(f"cohort vids out of range [0, {spec.population})")
+    data_resident = cache.data is not None
+    if data_resident and batches is not None:
+        raise ValueError("data-resident chunks gather shards from the "
+                         "cache; don't pass batches")
+    if batches is None and not data_resident:
+        per = [rt.cohort_batch(spec, population, cohorts[r], rng)
+               for r in range(n_rounds)]
+        batches = jax.device_put(
+            jax.tree.map(lambda *xs: np.stack(xs), *per))
+    if check_budgets:
+        ok, which = rt.rounds_within_population_budgets(spec, pstate,
+                                                        n_rounds)
+        if ok < n_rounds:
+            _raise_budget(which, spec)
+
+    cache.ensure_resident(pstate.store, np.unique(cohorts),
+                          population=population, tau=spec.tau,
+                          data_rows=data_rows)
+    slots = cache.slots_for(cohorts)
+
+    fl = pstate.fl
+    sig = sigmas_for(spec)
+    pipeline = spec.has_pipeline()
+    full_part = spec.participants_per_round() >= spec.n_clients
+    prefetch_exc = None
+
+    def _prefetch():
+        nonlocal prefetch_exc
+        if prefetch is not None:
+            try:
+                prefetch()
+            except Exception as e:    # noqa: BLE001 — re-raised below
+                prefetch_exc = e
+
+    if pipeline:
+        fn = resident_chunked_round_fn_for(spec, data_resident=data_resident)
+        operand = cache.data if data_resident else batches
+        new_p, new_s, key, new_cache, ms, masks = fn(
+            fl.params, fl.opt_state, operand, jnp.asarray(slots), fl.key,
+            sig, cache.residual)
+        cache.residual = new_cache
+        _prefetch()
+        if full_part:
+            # P == C makes participation_mask deterministically all-ones
+            # (a permutation prefix of length C covers every slot): the
+            # ledger replays without fetching the stacked masks — the
+            # steady-state chunk's last blocking sync, now gone
+            masks_np = None
+        else:
+            masks_np = np.asarray(masks)   # the one blocking sync per chunk
+    else:
+        fn = chunked_round_fn_for(spec)
+        new_p, new_s, key, ms = fn(fl.params, fl.opt_state, batches,
+                                   fl.key, sig)
+        _prefetch()
+        masks_np = None
+
+    # exact host ledger replay, mirroring the per-round driver expression by
+    # expression: per-cohort repeated adds, the pre-round global-max mirror
+    # of the store's monotone _max_rho, and the same lift order
+    charges = round_rho_charges(spec)
+    running = pstate.store.max_rho()
+    M = spec.population
+    ms_rows = _unstack_metrics(ms)     # one dispatch, R lazy views per key
+    recs: list[dict] = []
+    spent = fl.resource_spent
+    touched: set[int] = set()
+    for r in range(n_rounds):
+        vids_r = cohorts[r]
+        slots_r = slots[r]
+        outside = -math.inf if vids_r.size == M else running
+        if masks_np is None:
+            add = charges
+            participants = float(spec.n_clients)
+        else:
+            m = masks_np[r]
+            add = np.where(m > 0, charges, 0.0)
+            participants = float(int(m.sum()))
+        block = cache.rho[slots_r] + add
+        cache.rho[slots_r] = block
+        pstate.store.note_participation(vids_r, 1)
+        touched.update(int(v) for v in vids_r)
+        spent = spent + spec.round_cost()
+        rec = {k: v[r] for k, v in ms_rows.items()}  # lazy 0-d device views
+        rec["round"] = fl.rounds_done + r + 1
+        rec["iterations"] = (fl.rounds_done + r + 1) * spec.tau
+        rec["max_epsilon"] = zcdp_to_dp(float(np.max(block)), spec.delta)
+        rec["resource_spent"] = spent
+        rec["participants"] = participants
+        rt._population_epsilon_fix(rec, outside, spec.delta)
+        running = max(running, float(np.max(block)))
+        recs.append(rec)
+
+    # rho write-through: the store is authoritative again at the boundary
+    # (host-only — budget probes between chunks stay exact and sync-free)
+    tv = np.asarray(sorted(touched), np.int64)
+    tslots = np.asarray([cache.slot_of[int(v)] for v in tv], np.int64)
+    pstate.store.scatter_rho(tv, cache.rho[tslots])
+
+    changes: dict = dict(
+        params=new_p, opt_state=new_s, key=key,
+        rho=cache.rho[slots[-1]].copy(),
+        steps=fl.steps + n_rounds * spec.tau,
+        resource_spent=spent,
+        rounds_done=fl.rounds_done + n_rounds)
+    if pipeline and cache.residual is not None:
+        # the FLState keeps its "current cohort view" contract: a lazy
+        # device gather of the last round's rows out of the cache
+        changes["residual"] = cohort_gather(
+            cache.residual, jnp.asarray(slots[-1], jnp.int32),
+            backend=spec.kernel_backend)
+    new_state = pstate.replace(fl=fl.replace(**changes))
+    if prefetch_exc is not None:
+        raise PrefetchFailed(prefetch_exc, new_state, recs) from prefetch_exc
+    return new_state, recs

@@ -22,13 +22,17 @@ is ``arange(M)``), the data RNG stream is consumed in the same order, and
 the very same cached round function runs — the cohort path is bit-for-bit
 the dense ``participation`` path (pinned in tests/test_population.py).
 
-Fused driver: :func:`run_cohort_rounds` chunks R rounds through
+Fused drivers: :func:`run_cohort_rounds` chunks R rounds through
 ``repro.api.run_rounds`` with ONE cohort per chunk — cohorts resample at
-chunk boundaries (per-round cohorts inside the scan are a staged follow-up;
-the within-chunk ``participation`` mask still varies per round). The
-per-round and chunked drivers therefore realize *different cohort
-schedules* for chunk_rounds > 1 (both deterministic); with cohort ==
-population they coincide and the dense chunk/loop identity carries over.
+chunk boundaries, so for chunk_rounds > 1 the per-round and chunk-boundary
+drivers realize *different cohort schedules* (both deterministic; they
+coincide when cohort == population). Passing ``resident=`` a
+:class:`repro.population.resident.ResidentCache` removes that gap: the
+warm-client shard cache stays on device and a FRESH cohort is drawn every
+round inside the fused scan from the same stateless per-round draw, so the
+resident chunked driver realizes the per-round schedule exactly — and the
+steady-state chunk makes zero blocking host syncs under full within-cohort
+participation (see :mod:`repro.population.resident`).
 
 All value semantics are linear, as in ``repro.api.state``: a successful
 round CONSUMES the input state's device buffers (donation) — continue from
@@ -330,6 +334,8 @@ def run_cohort_rounds(spec: FederationSpec, pstate: PopulationState,
                       cohort: np.ndarray | None = None,
                       batches: Any = None,
                       prefetch: Callable[[], None] | None = None,
+                      resident: Any = None,
+                      cohorts: np.ndarray | None = None,
                       ) -> tuple[PopulationState, list[dict]]:
     """A fused chunk of R rounds over ONE cohort (resampled per chunk).
 
@@ -341,7 +347,29 @@ def run_cohort_rounds(spec: FederationSpec, pstate: PopulationState,
     index ``fl.rounds_done`` and the batches built from ``rng``. A raising
     ``prefetch`` propagates as ``PrefetchFailed`` carrying the completed
     *PopulationState* (store already updated), mirroring the dense
-    contract."""
+    contract.
+
+    ``resident=`` a :class:`repro.population.resident.ResidentCache`
+    switches to resident-cohort execution: a fresh cohort PER ROUND inside
+    the scan (the per-round driver's exact schedule), sticky state moving
+    through the device-resident cache instead of per-chunk store
+    round-trips. ``cohorts`` may pass the pre-drawn (R, K) per-round plan
+    (with ``batches`` leaves then (R, K, tau, B, ...) in per-round cohort
+    order); ``cohort`` must be None."""
+    if resident is not None:
+        from repro.population.resident import run_resident_rounds
+        if cohort is not None:
+            raise ValueError("resident execution draws a fresh cohort per "
+                             "round; pass the (R, K) plan via cohorts=, "
+                             "not a single cohort")
+        return run_resident_rounds(spec, pstate, population, rng, resident,
+                                   n_rounds, cohort_sampler=cohort_sampler,
+                                   check_budgets=check_budgets,
+                                   cohorts=cohorts, batches=batches,
+                                   prefetch=prefetch)
+    if cohorts is not None:
+        raise ValueError("a per-round cohort plan needs resident= (the "
+                         "chunk-boundary path runs one cohort per chunk)")
     sampler = _resolve_cohort_sampler(spec, cohort_sampler)
     if cohort is None:
         if batches is not None:
@@ -386,6 +414,7 @@ def train_population(spec: FederationSpec, pstate: PopulationState,
                      eval_fn: Callable | None = None, eval_every: int = 1,
                      rng=None, history: list[dict] | None = None,
                      chunk_rounds: int = 1,
+                     resident_cache: int = 0,
                      ) -> tuple[PopulationState, dict]:
     """Cohort-executed ``repro.api.train``: rounds until a budget binds.
 
@@ -397,23 +426,112 @@ def train_population(spec: FederationSpec, pstate: PopulationState,
     parameterized here with cohort probes
     (:func:`rounds_within_population_budgets`) and cohort chunks
     ``(cohort, device batches)``. Returns (state, summary) shaped like
-    ``repro.api.train``'s."""
+    ``repro.api.train``'s.
+
+    ``resident_cache=S > 0`` switches the chunks to resident-cohort
+    execution (:mod:`repro.population.resident`): S warm clients' sticky
+    state stays on device, every round draws a fresh cohort inside the
+    fused scan (the per-round driver's exact schedule), and the store is
+    touched only at chunk boundaries (rho write-through; residual rows on
+    eviction/flush). For stationary populations the warm shards' data rows
+    are cached on device too — steady-state chunks then build no per-round
+    host batches at all. Needs chunk_rounds > 1 (the per-round driver
+    already realizes the per-round schedule) and S >= min(chunk_rounds * K,
+    M). The summary gains a ``resident_cache`` entry with hit/miss/eviction
+    counts, and the cache is flushed before returning (the store is
+    checkpoint-authoritative again)."""
     if rng is None:
         rng = np.random.default_rng(spec.seed)
     sampler = _resolve_cohort_sampler(spec, cohort_sampler)
     history = [] if history is None else history
+    cache = None
+    if resident_cache:
+        from repro.population.resident import init_resident_cache
+        from repro.population.samplers import chunk_cohorts
+        if chunk_rounds <= 1:
+            raise ValueError(
+                "resident_cache needs chunk_rounds > 1: per-round cohorts "
+                "inside the fused scan are what the cache buys; the "
+                "per-round driver already realizes that schedule")
+        cache = init_resident_cache(spec, pstate, resident_cache,
+                                    population=population)
+        need = min(chunk_rounds * spec.n_clients, spec.population)
+        if cache.capacity < need:
+            raise ValueError(
+                f"resident_cache={cache.capacity} can underflow: a chunk "
+                f"may touch up to {need} distinct vids (chunk_rounds * K); "
+                f"raise it or lower chunk_rounds")
 
-    def build_chunk(start: int, n: int):
-        cohort = sampler(start, spec.population, spec.n_clients)
-        return (cohort, jax.device_put(
-            cohort_batches(spec, population, cohort, rng, n)))
+    if cache is None:
+        def build_chunk(start: int, n: int):
+            cohort = sampler(start, spec.population, spec.n_clients)
+            return (cohort, jax.device_put(
+                cohort_batches(spec, population, cohort, rng, n)))
 
-    def run_chunk(ps, chunk, n, prefetch):
-        cohort, batches = chunk
-        return run_cohort_rounds(spec, ps, population, rng, n,
-                                 cohort_sampler=sampler, check_budgets=False,
-                                 cohort=cohort, batches=batches,
-                                 prefetch=prefetch)
+        def run_chunk(ps, chunk, n, prefetch):
+            cohort, batches = chunk
+            return run_cohort_rounds(spec, ps, population, rng, n,
+                                     cohort_sampler=sampler,
+                                     check_budgets=False,
+                                     cohort=cohort, batches=batches,
+                                     prefetch=prefetch)
+
+        def run_tail(ps, chunk, r):
+            # tail rows were built for this chunk's (single) cohort, so it
+            # stays fixed across them (per-round path, compiled round
+            # reused)
+            cohort, batches = chunk
+            return _cohort_round_with_batch(
+                spec, ps, population, cohort,
+                jax.tree.map(lambda x, r=r: x[r], batches))
+    else:
+        def build_chunk(start: int, n: int):
+            cohorts = chunk_cohorts(sampler, start, n, spec.population,
+                                    spec.n_clients)
+            if cache.data is not None:
+                # stationary shards: pre-materialize only the COLD vids'
+                # rows (warm ones are already on device — the cache's whole
+                # point); residency won't change before run_chunk promotes
+                # exactly this plan's union. One throwaway generator serves
+                # every call — the stationary sampler ignores it
+                throwaway = np.random.default_rng(0)
+                rows = {int(v): population.sampler(int(v), spec.tau,
+                                                   throwaway)
+                        for v in np.unique(cohorts)
+                        if int(v) not in cache.slot_of}
+                return (cohorts, None, rows)
+            per = [cohort_batch(spec, population, cohorts[r], rng)
+                   for r in range(n)]
+            return (cohorts, jax.device_put(
+                jax.tree.map(lambda *xs: np.stack(xs), *per)), None)
+
+        def run_chunk(ps, chunk, n, prefetch):
+            from repro.population.resident import run_resident_rounds
+            cohorts, batches, rows = chunk
+            return run_resident_rounds(spec, ps, population, rng, cache, n,
+                                       cohort_sampler=sampler,
+                                       check_budgets=False,
+                                       cohorts=cohorts, batches=batches,
+                                       data_rows=rows, prefetch=prefetch)
+
+        def run_tail(ps, chunk, r):
+            # budget/max_rounds edge: hand the rows to the per-round store
+            # path. The cache flushes first (store regains authority) and
+            # resets — its rows would go stale as the store-side rounds
+            # land. Happens at most once per training run.
+            cohorts, batches, rows = chunk
+            if cache.warm_count() or cache.pending:
+                cache.flush(ps.store)
+                cache.reset()
+            if batches is None:
+                # stationary sampler ignores its rng: rebuild is exact and
+                # consumes no shared stream
+                batch = cohort_batch(spec, population, cohorts[r],
+                                     np.random.default_rng(0))
+            else:
+                batch = jax.tree.map(lambda x, r=r: x[r], batches)
+            return _cohort_round_with_batch(spec, ps, population,
+                                            cohorts[r], batch)
 
     pstate, best = budget_train_loop(
         state=pstate, max_rounds=max_rounds, eval_fn=eval_fn,
@@ -425,32 +543,37 @@ def train_population(spec: FederationSpec, pstate: PopulationState,
         run_single=lambda ps: run_cohort_round(
             spec, ps, population, rng, cohort_sampler=sampler,
             check_budgets=False),
-        build_chunk=build_chunk, run_chunk=run_chunk,
-        # tail rows were built for this chunk's cohort, so it stays fixed
-        # across them (per-round path, reusing the compiled single round)
-        run_tail=lambda ps, chunk, r: _cohort_round_from_row(
-            spec, ps, population, chunk[0], chunk[1], r),
+        build_chunk=build_chunk, run_chunk=run_chunk, run_tail=run_tail,
         eval_model=lambda ps: eval_params(spec, ps.fl))
-    return pstate, {
+    summary = {
         "best": best, "rounds": pstate.fl.rounds_done,
         "resource_spent": pstate.fl.resource_spent,
         "max_epsilon": zcdp_to_dp(pstate.store.max_rho(), spec.delta),
         "history": history,
     }
+    if cache is not None:
+        cache.flush(pstate.store)
+        summary["resident_cache"] = dict(cache.stats)
+    return pstate, summary
 
 
-def _cohort_round_from_row(spec, pstate, population, cohort, batches, r):
-    """Tail-chunk helper: run round ``r`` of a pre-built chunk through the
-    per-round path, keeping the CHUNK's cohort (the batches were built for
-    it)."""
-    row = jax.tree.map(lambda x, r=r: x[r], batches)
+def _cohort_round_with_batch(spec, pstate, population, cohort, batch):
+    """Tail-chunk helper: one per-round-path round over an explicit cohort
+    and its pre-built (K, tau, B, ...) batch."""
     cohort = _check_cohort(spec, population, cohort)
     outside_max = _outside_max_rho(pstate.store, cohort)
-    fl, rec = run_round(spec, _gathered_fl(spec, pstate, cohort), row,
+    fl, rec = run_round(spec, _gathered_fl(spec, pstate, cohort), batch,
                         check_budgets=False)
     new = _scatter_back(pstate, cohort, fl, 1)
     _population_epsilon_fix(rec, outside_max, spec.delta)
     return new, rec
+
+
+def _cohort_round_from_row(spec, pstate, population, cohort, batches, r):
+    """Back-compat shim: round ``r`` of a stacked pre-built chunk."""
+    return _cohort_round_with_batch(
+        spec, pstate, population, cohort,
+        jax.tree.map(lambda x, r=r: x[r], batches))
 
 
 # ---------------------------------------------------------------------------

@@ -64,6 +64,21 @@ def _uniform_without_replacement(rng: np.random.Generator, m: int,
     return rng.permutation(picked)[:k]
 
 
+def chunk_cohorts(sampler: "CohortSampler", start: int, n_rounds: int,
+                  population_size: int, cohort_size: int) -> np.ndarray:
+    """The stacked (R, K) per-round cohorts of rounds [start, start + R).
+
+    Row r is ``sampler(start + r, ...)`` — the SAME stateless per-round
+    draw the per-round driver makes, which is what pins chunked ==
+    per-round cohort schedules for the resident-cohort path: both drivers
+    call through here (directly or one round at a time), so fusing R
+    rounds into one scan never changes which clients train when."""
+    if n_rounds <= 0:
+        raise ValueError(f"n_rounds must be positive, got {n_rounds}")
+    return np.stack([sampler(start + r, population_size, cohort_size)
+                     for r in range(n_rounds)])
+
+
 @dataclass(frozen=True)
 class UniformCohort:
     """Uniform K-of-M cohorts, the cross-device FL default."""

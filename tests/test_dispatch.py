@@ -44,7 +44,8 @@ def _batch(seed=0):
 def test_registry_contents():
     assert set(kernel_names()) == {"dp_clip_noise", "flash_attention",
                                    "rwkv6_scan", "mamba2_ssd",
-                                   "quantize_decompress"}
+                                   "quantize_decompress",
+                                   "cohort_gather_scatter"}
     with pytest.raises(KeyError):
         get_kernel("nope")
     for name in kernel_names():

@@ -115,6 +115,19 @@ def _mamba_case(s, chunk, dtype):
     return build
 
 
+def _cohort_case(s, k, d, dtype, scatter=False):
+    def build():
+        ks = jax.random.split(jax.random.PRNGKey(5), 3)
+        cache = jax.random.normal(ks[0], (s, d), dtype)
+        slots = jax.random.permutation(ks[1], s)[:k].astype(jnp.int32)
+        if scatter:
+            rows = jax.random.normal(ks[2], (k, d), dtype)
+            # pure row copy: exact on every backend, no tolerance
+            return (cache, slots, rows), {}, 0.0
+        return (cache, slots), {}, 0.0
+    return build
+
+
 CASES = {
     "dp_clip_noise": [
         (f"n{n}-{np.dtype(d).name if d != jnp.bfloat16 else 'bf16'}-x{s}",
@@ -156,6 +169,17 @@ CASES = {
         ("s64-c16", _mamba_case(64, 16, jnp.float32)),
         ("s16-c16", _mamba_case(16, 16, jnp.float32)),
         ("s32-c8-bf16", _mamba_case(32, 8, jnp.bfloat16)),
+    ],
+    "cohort_gather_scatter": [
+        ("gather-s9-d5", _cohort_case(9, 3, 5, jnp.float32)),
+        ("scatter-s9-d5", _cohort_case(9, 3, 5, jnp.float32, scatter=True)),
+        # d > 128 exercises the lane-padding path of the Pallas kernel
+        ("gather-s64-d130", _cohort_case(64, 8, 130, jnp.float32)),
+        ("scatter-s64-d130", _cohort_case(64, 8, 130, jnp.float32,
+                                          scatter=True)),
+        ("gather-s16-d33-bf16", _cohort_case(16, 4, 33, jnp.bfloat16)),
+        ("scatter-s16-d33-bf16", _cohort_case(16, 4, 33, jnp.bfloat16,
+                                              scatter=True)),
     ],
 }
 

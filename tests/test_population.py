@@ -34,12 +34,14 @@ from repro.population import (
     device_block_bytes,
     exceeds_population_budgets,
     init_population_state,
+    init_resident_cache,
     load_population_state,
     peek_population_epsilon,
     population_from_federated,
     population_from_sampler,
     run_cohort_round,
     run_cohort_rounds,
+    run_resident_rounds,
     save_population_state,
     synthetic_population,
     train_population,
@@ -539,6 +541,75 @@ def test_env_population_smoke():
     assert 0 < (ps.store.rho > 0).sum() <= 8 * k
     for leaf in jax.tree.leaves(ps.fl.params):
         assert leaf.shape[0] == k
+
+
+# ------------------- resident-cohort driver (PR 8) -------------------------
+
+def _run_cohort_rounds_per_round(spec, pop, rounds):
+    st = init_population_state(spec, init_linear(DIM))
+    rng = np.random.default_rng(0)
+    for _ in range(rounds):
+        st, _ = run_cohort_round(spec, st, pop, rng, check_budgets=False)
+    return st
+
+
+def test_resident_identity_gate():
+    """Standing fast gate (seed 0, M > K): the resident-cohort driver —
+    fresh cohort per round inside the fused scan, sticky state on device —
+    is bit-identical to the per-round cohort driver after flush. The
+    seed-sweep tier re-runs this at 3 seeds x {q50, topk25} + churn."""
+    m, rounds, chunk = 12, 4, 2
+    spec = FederationSpec(
+        n_clients=C, tau=TAU, loss_fn=logreg_loss, optimizer=OPT,
+        clip_norm=1.0, dp=True, sigmas=(0.5,) * C, batch_sizes=(B,) * C,
+        population=m, cohort_size=C, compressor="topk",
+        compression_ratio=0.25, seed=0)
+    pop = synthetic_population(m, DIM, batch_size=B, seed=0)
+    a = _run_cohort_rounds_per_round(spec, pop, rounds)
+
+    b = init_population_state(spec, init_linear(DIM))
+    rng = np.random.default_rng(0)
+    cache = init_resident_cache(spec, b, m, population=pop)
+    for _ in range(rounds // chunk):
+        b, _ = run_resident_rounds(spec, b, pop, rng, cache,
+                                   n_rounds=chunk, check_budgets=False)
+    cache.flush(b.store)
+    for x, y in zip(jax.tree.leaves(a.fl.params),
+                    jax.tree.leaves(b.fl.params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    np.testing.assert_array_equal(a.store.rho, b.store.rho)
+    vids = np.arange(m)
+    np.testing.assert_array_equal(a.store.gather_residual(vids),
+                                  b.store.gather_residual(vids))
+
+
+@pytest.mark.skipif(not os.environ.get("REPRO_SMOKE_RESIDENT"),
+                    reason="set REPRO_SMOKE_RESIDENT=1 to smoke the "
+                           "resident-cohort driver at population scale")
+def test_env_resident_smoke():
+    """CI's resident leg (oracle kernels): M = 10_000 virtual clients,
+    K = 8 cohorts resampled per round inside the fused scan, S = 256 warm
+    slots — trains end to end via train_population(resident_cache=S) and
+    matches the per-round cohort driver bit for bit on the global model."""
+    m, k, s_cap, rounds = 10_000, 8, 256, 8
+    spec = FederationSpec(
+        n_clients=k, tau=TAU, loss_fn=logreg_loss, optimizer=OPT,
+        clip_norm=1.0, dp=True, sigmas=(0.5,) * k, batch_sizes=(B,) * k,
+        population=m, cohort_size=k, compressor="topk",
+        compression_ratio=0.25, eps_th=1e9, c_th=1e9)
+    pop = synthetic_population(m, dim=DIM, batch_size=B, alpha=0.3, seed=0)
+    ps = init_population_state(spec, init_linear(DIM))
+    ps, out = train_population(spec, ps, pop, max_rounds=rounds,
+                               chunk_rounds=4, resident_cache=s_cap,
+                               rng=np.random.default_rng(0))
+    assert out["rounds"] == rounds
+    assert np.isfinite(out["history"][-1]["loss"])
+    assert out["resident_cache"]["misses"] > 0
+    ref = _run_cohort_rounds_per_round(spec, pop, rounds)
+    for x, y in zip(jax.tree.leaves(ref.fl.params),
+                    jax.tree.leaves(ps.fl.params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    np.testing.assert_array_equal(ref.store.rho, ps.store.rho)
 
 
 # ------------------- launch CLI --------------------------------------------

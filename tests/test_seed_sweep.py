@@ -21,9 +21,14 @@ from repro.data import adult_like, split_iid
 from repro.models.linear import init_linear, logreg_loss
 from repro.optim import sgd
 from repro.population import (
+    UniformCohort,
+    chunk_cohorts,
     init_population_state,
+    init_resident_cache,
     population_from_federated,
     run_cohort_round,
+    run_resident_rounds,
+    synthetic_population,
 )
 
 pytestmark = pytest.mark.skipif(
@@ -110,3 +115,103 @@ def test_population_identity_gate_seed_sweep(seed, name, kw):
                     jax.tree.leaves(s_p.fl.params)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     np.testing.assert_array_equal(s_d.rho, s_p.store.rho)
+
+
+M_POP = 12                      # M > K: real cohort subsampling
+
+
+def _run_per_round(pspec, pop, seed, n_rounds):
+    """The per-round cohort driver reference: (state, per-round losses)."""
+    st = init_population_state(pspec, init_linear(DIM, seed=seed))
+    rng = np.random.default_rng(seed)
+    losses = []
+    for _ in range(n_rounds):
+        st, rec = run_cohort_round(pspec, st, pop, rng, check_budgets=False)
+        losses.append(float(rec["loss"]))
+    return st, losses
+
+
+def _assert_resident_matches(s_a, s_b, losses_a, losses_b):
+    """Full bit-identity: params, opt_state, ledger, participation counts,
+    resource meter, residual store rows, and the per-round loss stream."""
+    assert losses_a == losses_b
+    _leaves_equal(s_a.fl.params, s_b.fl.params)
+    _leaves_equal(s_a.fl.opt_state, s_b.fl.opt_state)
+    np.testing.assert_array_equal(s_a.store.rho, s_b.store.rho)
+    np.testing.assert_array_equal(s_a.store.rounds_participated,
+                                  s_b.store.rounds_participated)
+    assert float(s_a.fl.resource_spent) == float(s_b.fl.resource_spent)
+    if s_a.store.needs_residual():
+        vids = np.arange(M_POP)
+        np.testing.assert_array_equal(s_a.store.gather_residual(vids),
+                                      s_b.store.gather_residual(vids))
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+@pytest.mark.parametrize("name,kw", [("q50", dict(participation=0.5)),
+                                     ("topk25", dict(compressor="topk",
+                                                     compression_ratio=0.25))],
+                         ids=["q50", "topk25"])
+def test_resident_identity_gate_seed_sweep(seed, name, kw):
+    """Resident-cohort driver (fresh cohort per round inside the fused
+    scan, S warm clients on device) == per-round cohort driver, bit for
+    bit, at every swept seed — the PR-5 identity gate extended to the
+    resident path, with M > K so cohorts genuinely subsample."""
+    n_rounds, chunk = 6, 3
+    pspec = _spec(seed=seed, population=M_POP, cohort_size=C, **kw)
+    pop = synthetic_population(M_POP, DIM, batch_size=B, seed=seed)
+    s_a, losses_a = _run_per_round(pspec, pop, seed, n_rounds)
+
+    s_b = init_population_state(pspec, init_linear(DIM, seed=seed))
+    rng = np.random.default_rng(seed)
+    cache = init_resident_cache(pspec, s_b, M_POP, population=pop)
+    losses_b = []
+    for _ in range(n_rounds // chunk):
+        s_b, recs = run_resident_rounds(pspec, s_b, pop, rng, cache,
+                                        n_rounds=chunk, check_budgets=False)
+        losses_b.extend(float(r["loss"]) for r in recs)
+    cache.flush(s_b.store)
+    _assert_resident_matches(s_a, s_b, losses_a, losses_b)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_resident_eviction_churn_identity(seed):
+    """Arbitrary warm-set churn: a cache of S == K + 1 slots forces LRU
+    evictions (lazy write-back) and re-promotions every chunk, and the
+    store still lands bit-identical to the no-cache path after flush —
+    on a *stationary* population, so the data-resident shard block and
+    its eviction bookkeeping are exercised too."""
+    n_rounds = 6
+    kw = dict(compressor="topk", compression_ratio=0.25)
+    pspec = _spec(seed=seed, population=M_POP, cohort_size=C, **kw)
+    pop = synthetic_population(M_POP, DIM, batch_size=B, seed=seed,
+                               stationary=True)
+    s_a, losses_a = _run_per_round(pspec, pop, seed, n_rounds)
+
+    s_b = init_population_state(pspec, init_linear(DIM, seed=seed))
+    rng = np.random.default_rng(seed)
+    cache = init_resident_cache(pspec, s_b, C + 1, population=pop)
+    losses_b = []
+    for _ in range(n_rounds):   # one-round chunks: union K <= S, max churn
+        s_b, recs = run_resident_rounds(pspec, s_b, pop, rng, cache,
+                                        n_rounds=1, check_budgets=False)
+        losses_b.extend(float(r["loss"]) for r in recs)
+    cache.flush(s_b.store)
+    # the property is vacuous unless eviction actually happened
+    assert cache.stats["evictions"] > 0
+    _assert_resident_matches(s_a, s_b, losses_a, losses_b)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_chunked_schedule_matches_per_round(seed):
+    """chunk_cohorts realizes EXACTLY the per-round sampler draws, and is
+    invariant to how rounds are split into chunks — the schedule-identity
+    the resident driver's fused scan relies on."""
+    m, k, rounds = 100, 8, 10
+    sampler = UniformCohort(seed)
+    per_round = np.stack([sampler(r, m, k) for r in range(rounds)])
+    np.testing.assert_array_equal(
+        chunk_cohorts(sampler, 0, rounds, m, k), per_round)
+    np.testing.assert_array_equal(
+        np.vstack([chunk_cohorts(sampler, 0, 4, m, k),
+                   chunk_cohorts(sampler, 4, rounds - 4, m, k)]), per_round)
