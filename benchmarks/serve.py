@@ -1,0 +1,175 @@
+"""Serving-plane benchmark: tokens/s and per-token latency vs offered load.
+
+Open-loop Poisson arrivals (the ``asyncfl/clock.py`` determinism idiom:
+every request a pure function of ``(seed, rid)``) drive the
+continuous-batching :class:`repro.serve.SlotEngine` and the static-batch
+baseline over the SAME workload, on a :class:`WallClock` — simulated time
+advances by the measured host seconds of each prefill/decode and jumps
+idle gaps, so tokens/s is real engine speed and latency percentiles
+include real queueing at the offered load.
+
+Offered load is calibrated, not absolute: a saturated probe measures this
+host's aggregate decode capacity (tokens/s with all slots busy), then
+each scenario offers ``load x capacity`` tokens/s of Poisson demand.
+``load=2.0`` is the backpressure regime the queue-depth stats exist for.
+
+    PYTHONPATH=src python benchmarks/serve.py --smoke --check
+
+``--check`` gates (CI serve leg): continuous batching strictly above the
+static baseline on aggregate tokens/s at the mixed-length scenario, and
+byte-identical per-request tokens between the two modes (greedy).
+Writes BENCH_serve.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch, smoke_variant
+from repro.models.transformer import Transformer
+from repro.serve import (SlotEngine, WallClock, poisson_workload,
+                         serve_continuous, serve_static)
+
+PROMPT_LENS = (5, 8, 12)
+GEN_LENS = (4, 9)
+LOADS = (0.5, 1.0, 2.0)
+
+
+def _build(arch: str, smoke: bool, n_slots: int, max_len: int,
+           block_size: int):
+    cfg = get_arch(arch)
+    if smoke:
+        cfg = smoke_variant(cfg)
+    model = Transformer(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = SlotEngine(model, params, n_slots=n_slots, max_len=max_len,
+                        block_size=block_size)
+    return model, params, engine
+
+
+def _calibrate(engine, vocab: int) -> float:
+    """Aggregate decode capacity (tokens/s) with every slot busy: serve a
+    zero-arrival-gap probe and take the steady throughput."""
+    probe = poisson_workload(2 * engine.n_slots, 1e9, vocab, seed=99,
+                             prompt_lens=PROMPT_LENS, gen_lens=GEN_LENS)
+    report = serve_continuous(engine, probe)
+    return report.tokens_per_s
+
+
+def _row(mode: str, load: float, offered: float, report) -> dict:
+    s = report.summary()
+    return {
+        "mode": mode, "load": load,
+        "offered_tokens_per_s": round(offered, 1),
+        "tokens_per_s": s["tokens_per_s"],
+        "p50_latency_ms": round(s["p50_latency_s"] * 1e3, 3),
+        "p99_latency_ms": round(s["p99_latency_s"] * 1e3, 3),
+        "requests": s["requests"], "tokens_out": s["tokens_out"],
+        "max_queue_depth": s["max_queue_depth"],
+        "occupancy_mean": s["occupancy_mean"],
+    }
+
+
+def run(arch: str, smoke: bool, n_slots: int, block_size: int,
+        n_requests: int) -> dict:
+    max_len = max(PROMPT_LENS) + max(GEN_LENS)
+    model, params, engine = _build(arch, smoke, n_slots, max_len,
+                                   block_size)
+    vocab = model.cfg.vocab
+    engine.warmup(buckets=PROMPT_LENS)
+    capacity = _calibrate(engine, vocab)
+    mean_gen = float(np.mean(GEN_LENS))
+    # warm the static path's per-length prefill compiles off the clock
+    serve_static(model, params, poisson_workload(
+        3, 1e9, vocab, seed=98, prompt_lens=PROMPT_LENS,
+        gen_lens=GEN_LENS), batch=n_slots, max_len=max_len)
+
+    rows = []
+    token_match = True
+    for load in LOADS:
+        offered = load * capacity
+        rate = offered / mean_gen
+        wl_c = poisson_workload(n_requests, rate, vocab, seed=7,
+                                prompt_lens=PROMPT_LENS, gen_lens=GEN_LENS)
+        wl_s = poisson_workload(n_requests, rate, vocab, seed=7,
+                                prompt_lens=PROMPT_LENS, gen_lens=GEN_LENS)
+        rep_c = serve_continuous(engine, wl_c, clock=WallClock())
+        rep_s = serve_static(model, params, wl_s, clock=WallClock(),
+                             batch=n_slots, max_len=max_len)
+        rows.append(_row("continuous", load, offered, rep_c))
+        rows.append(_row("static", load, offered, rep_s))
+        token_match &= all(a.out == b.out for a, b in
+                           zip(rep_c.requests, rep_s.requests))
+        print(f"load={load:<4} continuous {rows[-2]['tokens_per_s']:>8.1f} "
+              f"tok/s p99={rows[-2]['p99_latency_ms']:>8.2f} ms | "
+              f"static {rows[-1]['tokens_per_s']:>8.1f} tok/s "
+              f"p99={rows[-1]['p99_latency_ms']:>8.2f} ms")
+
+    return {
+        "bench": "serve",
+        "config": {"arch": model.cfg.name, "smoke": smoke,
+                   "n_slots": n_slots, "block_size": block_size or max_len,
+                   "max_len": max_len, "n_requests": n_requests,
+                   "prompt_lens": list(PROMPT_LENS),
+                   "gen_lens": list(GEN_LENS),
+                   "capacity_tokens_per_s": round(capacity, 1),
+                   "compile_s": engine.stats()["compile_s"]},
+        "jax": jax.__version__,
+        "device": str(jax.devices()[0]),
+        "results": rows,
+        "tokens_byte_identical": bool(token_match),
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-4b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="smoke model variant + reduced workload for CI")
+    ap.add_argument("--check", action="store_true",
+                    help="fail unless continuous batching beats the "
+                         "static baseline on aggregate tokens/s at every "
+                         "mixed-length load, with byte-identical tokens")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--block-size", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=0,
+                    help="workload size per load point (default 10 smoke, "
+                         "32 full)")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args(argv)
+
+    n_requests = args.requests or (10 if args.smoke else 32)
+    report = run(args.arch, args.smoke, args.slots, args.block_size,
+                 n_requests)
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    print(f"wrote {args.out}")
+
+    if args.check:
+        if not report["tokens_byte_identical"]:
+            print("REGRESSION: continuous and static emitted different "
+                  "tokens for the same greedy workload")
+            return 1
+        by_load = {}
+        for r in report["results"]:
+            by_load.setdefault(r["load"], {})[r["mode"]] = r
+        slow = {load: (m["continuous"]["tokens_per_s"],
+                       m["static"]["tokens_per_s"])
+                for load, m in by_load.items()
+                if m["continuous"]["tokens_per_s"]
+                <= m["static"]["tokens_per_s"]}
+        if slow:
+            print(f"REGRESSION: continuous batching not above the static "
+                  f"baseline (load -> (cont, static) tok/s): {slow}")
+            return 1
+        print("serve gate passed: continuous > static at every load, "
+              "tokens byte-identical")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

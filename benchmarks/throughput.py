@@ -305,14 +305,18 @@ def run_resident_cohort(smoke: bool) -> dict:
 # writes the dequantized y (3 f32 arrays, 12N bytes) and spends ~6 flops per
 # element (abs-max reduction, normalize, scale, jitter-add, floor, dequant);
 # cohort gather is a pure row copy — K*D read + K*D write, zero flops — so
-# its roofline position is memory-bound by construction.
+# its roofline position is memory-bound by construction; dp_clip_noise (the
+# per-round DP hot path: square+reduce for the norm, clip scale, fused
+# noise multiply-add, ~5 flops/element) reads g and noise and writes y —
+# 12N bytes, streaming like the others.
 def _kernel_scenarios(smoke: bool) -> list[dict]:
     n = 1 << 16 if smoke else 1 << 20
     s_rows, d = (128, 256) if smoke else (512, 4096)
     key = jax.random.PRNGKey(0)
-    kx, ku, kc = jax.random.split(key, 3)
+    kx, ku, kc, kn = jax.random.split(key, 4)
     x = jax.random.normal(kx, (n,), jnp.float32)
     u = jax.random.uniform(ku, (n,), jnp.float32)
+    noise = jax.random.normal(kn, (n,), jnp.float32)
     cachemat = jax.random.normal(kc, (s_rows, d), jnp.float32)
     slots = jnp.asarray(np.arange(0, s_rows, s_rows // C)[:C], jnp.int32)
     return [
@@ -324,6 +328,10 @@ def _kernel_scenarios(smoke: bool) -> list[dict]:
          "shape": f"S={s_rows} K={C} D={d}", "args": (cachemat, slots),
          "call": lambda impl: (lambda c_, s_: impl(c_, s_)),
          "flops": 0.0, "hbm_bytes": 2.0 * C * d * 4.0},
+        {"kernel": "dp_clip_noise",
+         "shape": f"N={n}", "args": (x, noise),
+         "call": lambda impl: (lambda g_, n_: impl(g_, n_, 1.0, 0.5)),
+         "flops": 5.0 * n, "hbm_bytes": 12.0 * n},
     ]
 
 
@@ -539,13 +547,14 @@ def main(argv=None) -> int:
             print(f"REGRESSION: resident driver slower than the "
                   f"chunk-boundary path: {rc}")
             return 1
-        # kernel roofline: both streamed kernels must be covered and every
-        # row must project memory-bound on v5e — these kernels do O(1)
-        # flops per byte, so a compute-bound verdict means the analytic
-        # model (or the kernel itself) regressed
+        # kernel roofline: all three streamed kernels must be covered and
+        # every row must project memory-bound on v5e — these kernels do
+        # O(1) flops per byte, so a compute-bound verdict means the
+        # analytic model (or the kernel itself) regressed
         kr = report["kernel_roofline"]["rows"]
         covered = {r["kernel"] for r in kr}
-        if not {"quantize_decompress", "cohort_gather_scatter"} <= covered:
+        if not {"quantize_decompress", "cohort_gather_scatter",
+                "dp_clip_noise"} <= covered:
             print(f"REGRESSION: kernel roofline rows missing: {covered}")
             return 1
         off_roof = [r for r in kr if r["v5e_bottleneck"] != "memory"]

@@ -272,6 +272,62 @@ def fill_kv_cache(cache, k, v, kind: str, window: int = 0, chunk: int = 0):
     return {"k": tail_k[:, order], "v": tail_v[:, order]}
 
 
+def init_paged_kv_cache(n_blocks: int, block_size: int, n_kv_heads: int,
+                        head_dim: int, dtype=jnp.bfloat16):
+    """Preallocated block pool for the paged serving cache.
+
+    Unlike the dense per-sequence cache of :func:`init_kv_cache`, the pool
+    is indexed by *physical block id*: a slot owns an arbitrary set of
+    blocks through an engine-managed ``(slots, blocks_per_slot)`` block
+    table, so recycled slots reuse whatever blocks are free rather than a
+    fixed contiguous span. Layout inside a slot's span is natural
+    (position ``p`` lives at logical offset ``p``; no ring truncation —
+    swa/chunk visibility is enforced by the decode mask instead), which
+    makes the pool literally the dense full-attention cache when one
+    block spans ``max_len`` and the table is the identity."""
+    shape = (n_blocks, block_size, n_kv_heads, head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def paged_decode_attention(params, x, cache, table, pos, *,
+                           kind: str = "full", window: int = 0,
+                           chunk: int = 0, use_rope: bool = True,
+                           rope_theta: float = 1e4):
+    """One-token decode over B independent slots of a paged KV cache.
+
+    x (B, 1, d); cache {"k"/"v": (NB, bs, KV, hd)} block pool; table
+    (B, bps) int32 maps each slot's logical block l to a physical block;
+    pos (B,) int32 per-slot position of this token. Writes each slot's
+    k/v at (table[b, pos_b // bs], pos_b % bs), gathers the slot's full
+    logical span back in position order, and masks entries beyond pos_b
+    (plus the sliding-window / chunk visibility rule). With one block
+    spanning the span and an identity table the gathered reads are
+    bit-identical to the dense :func:`decode_attention` cache reads; with
+    more blocks they are the same values in the same position order, so
+    full-attention outputs stay bit-identical to the dense path.
+    """
+    b = x.shape[0]
+    q, k, v = _project_qkv(params, x, pos[:, None], use_rope, rope_theta)
+    bs = cache["k"].shape[1]
+    phys = table[jnp.arange(b), pos // bs]
+    off = pos % bs
+    ck = cache["k"].at[phys, off].set(k[:, 0].astype(cache["k"].dtype))
+    cv = cache["v"].at[phys, off].set(v[:, 0].astype(cache["v"].dtype))
+    span = table.shape[1] * bs
+    kb = ck[table].reshape(b, span, *ck.shape[2:])
+    vb = cv[table].reshape(b, span, *cv.shape[2:])
+    p = jnp.arange(span)
+    valid = p[None, :] <= pos[:, None]
+    if kind == "swa":
+        valid &= p[None, :] > pos[:, None] - window
+    elif kind == "chunk":
+        valid &= p[None, :] >= (pos[:, None] // chunk) * chunk
+    mask = valid[:, None, None, None, :]
+    ctxv = _sdpa(q, kb, vb, mask)
+    out = jnp.einsum("bshk,hkd->bsd", ctxv, params["wo"])
+    return shard_hint(out, "batch", "seq", None), {"k": ck, "v": cv}
+
+
 def decode_attention(params, x, cache, pos, *, kind: str = "full",
                      window: int = 0, chunk: int = 0, use_rope: bool = True,
                      rope_theta: float = 1e4):

@@ -339,14 +339,19 @@ class Transformer:
     # serving: prefill + decode
     # ------------------------------------------------------------------
 
-    def _layer_cache_shape(self, spec: LayerSpec, batch: int, max_len: int):
+    def _layer_cache_shape(self, spec: LayerSpec, batch: int, max_len: int,
+                           natural: bool = False):
         cfg = self.cfg
         dt = _dtype(cfg)
         cache: dict[str, Any] = {}
         if spec.mixer in ("attn", "shared_attn"):
+            # natural: full-length position-ordered cache even for swa /
+            # chunk layers (no ring truncation) — the layout the paged
+            # serving pool ingests; visibility is enforced by masks
             cache["mixer"] = attn.init_kv_cache(
-                batch, spec.attn_kind, max_len, cfg.n_kv_heads,
-                cfg.resolved_head_dim, cfg.window, cfg.chunk, dt)
+                batch, "full" if natural else spec.attn_kind, max_len,
+                cfg.n_kv_heads, cfg.resolved_head_dim, cfg.window,
+                cfg.chunk, dt)
         elif spec.mixer == "mamba2":
             cache["mixer"] = ssm_mod.init_mamba2_cache(
                 batch, cfg.d_model, cfg.ssm_state, cfg.ssm_headdim,
@@ -364,17 +369,40 @@ class Transformer:
             cache["ffn"] = {}
         return cache
 
-    def init_cache(self, batch: int, max_len: int):
+    def init_cache(self, batch: int, max_len: int, natural: bool = False):
         """Zeroed caches matching the segment structure. KV caches for swa /
-        chunk layers are ring buffers of the window/chunk size."""
+        chunk layers are ring buffers of the window/chunk size (or full
+        position-ordered buffers under ``natural``, the serving-ingest
+        layout)."""
         caches = []
         for seg in self.cfg.segments:
             pat = {}
             for j, ls in enumerate(seg.pattern):
-                one = self._layer_cache_shape(ls, batch, max_len)
+                one = self._layer_cache_shape(ls, batch, max_len, natural)
                 pat[str(j)] = jax.tree.map(
                     lambda x: jnp.broadcast_to(
                         x[None], (seg.n_steps,) + x.shape), one)
+            caches.append(pat)
+        return caches
+
+    def init_paged_cache(self, n_slots: int, n_blocks: int, block_size: int):
+        """Serving caches for a continuous-batching engine: attention
+        layers get a physical block pool (block-table indexed, shared
+        geometry across layers), recurrent layers keep per-slot state rows
+        (their state is O(1) per slot — nothing to page)."""
+        cfg = self.cfg
+        caches = []
+        for seg in cfg.segments:
+            pat = {}
+            for j, ls in enumerate(seg.pattern):
+                one = self._layer_cache_shape(ls, n_slots, 1)
+                if ls.mixer in ("attn", "shared_attn"):
+                    one["mixer"] = attn.init_paged_kv_cache(
+                        n_blocks, block_size, cfg.n_kv_heads,
+                        cfg.resolved_head_dim, _dtype(cfg))
+                pat[str(j)] = jax.tree.map(
+                    lambda x: jnp.zeros((seg.n_steps,) + x.shape, x.dtype),
+                    one)
             caches.append(pat)
         return caches
 
@@ -402,17 +430,24 @@ class Transformer:
             axes.append(pat)
         return axes
 
-    def _decode_layer(self, spec: LayerSpec, lparams, shared, cache, x, pos):
+    def _decode_layer(self, spec: LayerSpec, lparams, shared, cache, x, pos,
+                      table=None):
         cfg = self.cfg
         h = rmsnorm(lparams["norm1"], x)
         new_cache = dict(cache)
         if spec.mixer in ("attn", "shared_attn"):
             p = (self._merged_shared_attn(lparams["mixer"], shared)
                  if spec.mixer == "shared_attn" else lparams["mixer"])
-            out, kv = attn.decode_attention(
-                p, h, cache["mixer"], pos, kind=spec.attn_kind,
-                window=cfg.window, chunk=cfg.chunk, use_rope=spec.use_rope,
-                rope_theta=cfg.rope_theta)
+            if table is None:
+                out, kv = attn.decode_attention(
+                    p, h, cache["mixer"], pos, kind=spec.attn_kind,
+                    window=cfg.window, chunk=cfg.chunk,
+                    use_rope=spec.use_rope, rope_theta=cfg.rope_theta)
+            else:
+                out, kv = attn.paged_decode_attention(
+                    p, h, cache["mixer"], table, pos, kind=spec.attn_kind,
+                    window=cfg.window, chunk=cfg.chunk,
+                    use_rope=spec.use_rope, rope_theta=cfg.rope_theta)
             new_cache["mixer"] = kv
         elif spec.mixer == "mamba2":
             out, mc = ssm_mod.mamba2_decode(
@@ -439,9 +474,14 @@ class Transformer:
             x = x + out2
         return x, new_cache
 
-    def decode_step(self, params, caches, tokens, pos):
+    def decode_step(self, params, caches, tokens, pos, table=None):
         """One decode step. tokens (B,) int32; pos () int32 = position of
-        this token (prefix-inclusive). Returns (logits (B, V), new caches)."""
+        this token (prefix-inclusive). Returns (logits (B, V), new caches).
+
+        With ``table`` (B, blocks_per_slot) int32, ``caches`` are the paged
+        pools of :meth:`init_paged_cache` and ``pos`` is a per-slot (B,)
+        vector — the continuous-batching decode where every slot sits at
+        its own position."""
         cfg = self.cfg
         x = embed(params["embed"], tokens[:, None], cfg.embed_impl)
         if cfg.embed_scale:
@@ -455,7 +495,8 @@ class Transformer:
                 new_c = {}
                 for j, ls in enumerate(seg.pattern):
                     x, new_c[str(j)] = self._decode_layer(
-                        ls, p_step[str(j)], shared, c_step[str(j)], x, pos)
+                        ls, p_step[str(j)], shared, c_step[str(j)], x, pos,
+                        table)
                 return x, new_c
 
             x, new_seg_cache = jax.lax.scan(step, x, (seg_params, seg_cache))
@@ -464,16 +505,17 @@ class Transformer:
         logits = unembed(params["embed"], x)[:, 0]
         return logits, new_caches
 
-    def prefill(self, params, tokens, prefix=None, max_len=None):
-        """Run the full prompt, building caches. Returns (last-token logits
-        (B, V), caches, next position)."""
+    def _prefill_states(self, params, tokens, prefix, max_len,
+                        natural=False):
+        """Shared prefill body: final-normed hidden states (B, S_total, d)
+        plus the filled caches."""
         cfg = self.cfg
         x = self._embed_tokens(params, tokens, prefix)
         b, s_total = x.shape[:2]
         max_len = max_len or s_total
         positions = jnp.arange(s_total)
         shared = params.get("shared")
-        caches = self.init_cache(b, max_len)
+        caches = self.init_cache(b, max_len, natural)
         new_caches = []
         for seg_params, seg_cache, seg in zip(params["segments"], caches,
                                               cfg.segments):
@@ -489,8 +531,87 @@ class Transformer:
             x, new_seg_cache = jax.lax.scan(step, x, (seg_params, seg_cache))
             new_caches.append(new_seg_cache)
         x = rmsnorm(params["final_norm"], x)
+        return x, new_caches, s_total
+
+    def prefill(self, params, tokens, prefix=None, max_len=None):
+        """Run the full prompt, building caches. Returns (last-token logits
+        (B, V), caches, next position)."""
+        x, new_caches, s_total = self._prefill_states(params, tokens,
+                                                      prefix, max_len)
         logits = unembed(params["embed"], x[:, -1:])[:, 0]
         return logits, new_caches, jnp.asarray(s_total, jnp.int32)
+
+    def prefill_at(self, params, tokens, lengths, prefix=None,
+                   max_len=None):
+        """Bucketed prefill for the serving engine: tokens (B, S) are
+        right-padded to a common bucket length, lengths (B,) int32 are the
+        true prompt lengths. Returns (per-row logits at each row's last
+        TRUE token, natural-layout caches, per-row next position).
+
+        Rows' cache entries beyond their true length hold pad garbage;
+        paged decode overwrites position p before the ``p <= pos`` mask
+        ever exposes it, so right-padding is exact for attention layers.
+        Recurrent state (mamba2 / rwkv6 / rwkv_cm) consumes pad tokens,
+        so engines must prefill those archs at exact lengths.
+        """
+        p_len = 0 if prefix is None else prefix.shape[1]
+        x, new_caches, s_total = self._prefill_states(
+            params, tokens, prefix, max_len, natural=True)
+        b = x.shape[0]
+        idx = p_len + lengths - 1
+        xg = x[jnp.arange(b), idx][:, None]
+        logits = unembed(params["embed"], xg)[:, 0]
+        return logits, new_caches, (p_len + lengths).astype(jnp.int32)
+
+    def insert_prefill(self, paged, pre, table_rows, slots):
+        """Scatter one prefill batch's natural-layout caches into the
+        paged pools / slot state rows.
+
+        paged: pools from :meth:`init_paged_cache`; pre: caches from
+        :meth:`prefill_at` (attention rows in position order, length n);
+        table_rows (nb, bps) int32 physical blocks of the target slots;
+        slots (nb,) int32 slot ids. Only the blocks the prompt span
+        covers are written — later blocks keep stale garbage that decode
+        overwrites before the position mask exposes it. Duplicate rows
+        (admission padding) must carry identical data: scatters with
+        repeated indices then commute."""
+        def scatter_blocks(pool, rows):
+            # pool (T, NB, bs, KV, hd); rows (T, nb, n, KV, hd)
+            bs = pool.shape[2]
+            n = rows.shape[2]
+            nb_blocks = -(-n // bs)
+            pad = nb_blocks * bs - n
+            if pad:
+                rows = jnp.pad(rows, ((0, 0), (0, 0), (0, pad), (0, 0),
+                                      (0, 0)))
+            blocks = rows.reshape(rows.shape[0], rows.shape[1], nb_blocks,
+                                  bs, *rows.shape[3:])
+            return pool.at[:, table_rows[:, :nb_blocks]].set(
+                blocks.astype(pool.dtype))
+
+        out = []
+        for seg_pre, seg_paged, seg in zip(pre, paged, self.cfg.segments):
+            pat = {}
+            for j, ls in enumerate(seg.pattern):
+                cp, cg = seg_pre[str(j)], seg_paged[str(j)]
+                new = {}
+                if ls.mixer in ("attn", "shared_attn"):
+                    new["mixer"] = {
+                        "k": scatter_blocks(cg["mixer"]["k"],
+                                            cp["mixer"]["k"]),
+                        "v": scatter_blocks(cg["mixer"]["v"],
+                                            cp["mixer"]["v"]),
+                    }
+                else:
+                    new["mixer"] = jax.tree.map(
+                        lambda g, p: g.at[:, slots].set(p.astype(g.dtype)),
+                        cg["mixer"], cp["mixer"])
+                new["ffn"] = jax.tree.map(
+                    lambda g, p: g.at[:, slots].set(p.astype(g.dtype)),
+                    cg["ffn"], cp["ffn"])
+                pat[str(j)] = new
+            out.append(pat)
+        return out
 
     def _prefill_layer(self, spec: LayerSpec, lparams, shared, cache, x,
                        positions):

@@ -1,0 +1,24 @@
+"""Continuous-batching serving plane: slot engine, paged KV cache
+scheduling, and federated checkpoint hot-swap (see ROADMAP "Serving
+plane")."""
+from repro.serve.engine import SlotEngine, model_pads_ok
+from repro.serve.requests import Request, poisson_workload
+from repro.serve.scheduler import (
+    ServeReport,
+    StepClock,
+    WallClock,
+    serve_continuous,
+    serve_static,
+)
+
+__all__ = [
+    "Request",
+    "ServeReport",
+    "SlotEngine",
+    "StepClock",
+    "WallClock",
+    "model_pads_ok",
+    "poisson_workload",
+    "serve_continuous",
+    "serve_static",
+]
