@@ -52,6 +52,24 @@ kernels are streaming (O(1) flops/byte), so ``--check`` gates that every
 row's projected bottleneck is the memory term — a compute-bound verdict
 means the analytic model (or the kernel) regressed.
 
+A **mesh-plane** section (needs >= 8 devices; rows are skipped with a
+reason otherwise, so the committed full-grid JSON must come from an
+``--xla_force_host_platform_device_count=8`` run) times the 2D client x
+model engine (repro.mesh) against the 1D shard_map plane on the same
+federation: the degenerate ``(8, 1)`` mesh — bitwise the shard_map
+protocol, so its throughput gap is pure engine overhead (padding plumbing
++ partial-auto lowering) — and the true ``(4, 2)`` mesh, which halves the
+client axis to buy a model axis. On this single-host CPU benchmark the
+(4, 2) row pays real cost (half the client parallelism, no memory win to
+show for it); the row exists to track that cost, not to win. A
+**too-big-model** companion pins the placement story end to end: a
+replica footprint hint that exceeds a (tiny, env-injected) per-device
+budget must route ``engine="auto"`` onto mesh_2d with enough model shards
+that the per-device slice fits, and the round must actually run.
+``--check`` gates the degenerate row within a noise margin of shard_map
+and the too-big row's ``per_device_bytes <= budget < replica_bytes``
+invariant plus a finite loss.
+
 A third scenario tracks **buffered-async federation** (repro.asyncfl) on
 a heterogeneous straggler fleet: the simulated seconds to land a target
 amount of zCDP (equivalently, R sync rounds' worth of client updates) for
@@ -393,6 +411,80 @@ def run_kernel_roofline(smoke: bool) -> dict:
     return {"iters": iters, "repeats": repeats, "rows": rows}
 
 
+def run_mesh_plane(smoke: bool) -> dict:
+    """2D mesh engine vs the 1D shard_map plane, plus the too-big-model
+    placement gate. See the module docstring for what each row means."""
+    n_dev = jax.device_count()
+    if n_dev < 8:
+        return {"skipped": True,
+                "reason": f"needs 8 devices for the (4,2) mesh, have {n_dev}"
+                          " — run under "
+                          "XLA_FLAGS=--xla_force_host_platform_device_count=8"}
+    rounds, repeats = (16, 2) if smoke else (48, 3)
+    chunk = 8
+    rows = []
+    for engine, shape in [("shard_map", None), ("mesh_2d", (8, 1)),
+                          ("mesh_2d", (4, 2))]:
+        kw = {"mesh_shape": shape} if shape else {}
+        spec = reference_spec(engine, "none", 1.0, **kw)
+        r = time_driver(spec, rounds, chunk, repeats)
+        r["mesh_shape"] = list(shape) if shape else None
+        rows.append(r)
+        label = f"{engine}{list(shape) if shape else ''}"
+        print(f"mesh {label:16s} chunk={chunk:<3} "
+              f"{r['rounds_per_s']:>8.1f} rounds/s "
+              f"({r['local_steps_per_s']:.0f} steps/s)")
+    return {"rows": rows, "too_big_model": _run_mesh_too_big()}
+
+
+def _run_mesh_too_big() -> dict:
+    """Placement gate: a replica-footprint hint over the per-device budget
+    must steer ``engine="auto"`` onto mesh_2d with enough model shards to
+    fit, and the resulting program must train. The budget is injected via
+    ``REPRO_DEVICE_MEM_BYTES`` (restored afterwards) and sized so a
+    4-shard slice fits but the whole replica does not."""
+    import os
+
+    from repro.api import resolve_engine
+    from repro.mesh.placement import (
+        ENV_DEVICE_MEM,
+        default_mesh_shape,
+        device_memory_budget,
+    )
+
+    replica = 100 * DIM * 4                       # 12.8 KB synthetic hint
+    budget = 4 * 1024                             # fits at dm=4, not at dm=1
+    prev = os.environ.get(ENV_DEVICE_MEM)
+    os.environ[ENV_DEVICE_MEM] = str(budget)
+    try:
+        spec = reference_spec("auto", "none", 1.0, replica_bytes=replica)
+        engine = resolve_engine(spec)
+        shape = default_mesh_shape(C, jax.device_count(),
+                                   replica_bytes=replica)
+        per_device = -(-replica // shape[1])
+        sampler = make_sampler()
+        state = init_state(spec, init_linear(DIM))
+        state, out = train(spec, state, sampler, max_rounds=2)
+        loss = float(out["history"][-1]["loss"])
+        row = {
+            "replica_bytes": replica,
+            "budget_bytes": device_memory_budget(),
+            "resolved_engine": engine,
+            "mesh_shape": list(shape),
+            "per_device_bytes": per_device,
+            "final_loss": round(loss, 6),
+        }
+        print(f"mesh too-big     replica={replica} budget={budget} -> "
+              f"{engine} {shape} ({per_device} B/device, "
+              f"loss {loss:.4f})")
+        return row
+    finally:
+        if prev is None:
+            del os.environ[ENV_DEVICE_MEM]
+        else:
+            os.environ[ENV_DEVICE_MEM] = prev
+
+
 def run_async_hetero(smoke: bool) -> dict:
     """Simulated-seconds-to-target-rho on a straggler fleet.
 
@@ -482,6 +574,7 @@ def run_grid(smoke: bool) -> dict:
         "resident_cohort": run_resident_cohort(smoke),
         "kernel_roofline": run_kernel_roofline(smoke),
         "async_hetero": run_async_hetero(smoke),
+        "mesh_plane": run_mesh_plane(smoke),
     }
 
 
@@ -562,6 +655,29 @@ def main(argv=None) -> int:
             print(f"REGRESSION: streamed kernel projects compute-bound: "
                   f"{off_roof}")
             return 1
+        # mesh plane (only when the device count admitted it): the
+        # degenerate (8,1) mesh runs the shard_map protocol through the
+        # mesh engine — large noise margin (0.5) because the padding
+        # plumbing + partial-auto lowering cost is real and the walls are
+        # sub-second, but a collapsed engine lands far below. The too-big
+        # row's fit invariant is exact: per-device slice within the budget
+        # the full replica exceeds, and the placed program trained.
+        mp = report["mesh_plane"]
+        if not mp.get("skipped"):
+            by = {(r["engine"], tuple(r["mesh_shape"] or ())):
+                  r["rounds_per_s"] for r in mp["rows"]}
+            degen = by[("mesh_2d", (8, 1))]
+            if degen < 0.5 * by[("shard_map", ())]:
+                print(f"REGRESSION: degenerate mesh far below shard_map: "
+                      f"{mp['rows']}")
+                return 1
+            tb = mp["too_big_model"]
+            fit_ok = (tb["per_device_bytes"] <= tb["budget_bytes"]
+                      < tb["replica_bytes"])
+            if (tb["resolved_engine"] != "mesh_2d" or not fit_ok
+                    or not np.isfinite(tb["final_loss"])):
+                print(f"REGRESSION: too-big-model placement gate: {tb}")
+                return 1
         # async vs sync simulated time: strict — the event schedule is
         # deterministic (no wall-clock noise), and on a ~7x-spread fleet
         # the buffered driver must beat the barrier outright
@@ -577,7 +693,9 @@ def main(argv=None) -> int:
               f"resident cohort 0 syncs/round at "
               f"{rc['speedup_resident_vs_chunk']}x chunk-boundary; "
               f"roofline memory-bound for {sorted(covered)}; "
-              f"async {ah['sim_speedup']}x sync in simulated seconds")
+              f"async {ah['sim_speedup']}x sync in simulated seconds; "
+              + ("mesh plane skipped (device count)" if mp.get("skipped")
+                 else "mesh plane placed + within margin"))
     return 0
 
 

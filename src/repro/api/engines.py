@@ -25,6 +25,9 @@ ship by default:
                 peak memory for big-model CPU simulations).
     "shard_map" explicit collective schedule (core/fl_shard_map.py): one
                 ``lax.pmean`` over the client mesh axis per round.
+    "mesh_2d"   2D client x model plane (repro.mesh): shard_map's client
+                blocking plus GSPMD model sharding within each client slab
+                — the engine for replicas too big for one device.
 
 ``register_engine`` adds new execution strategies without touching the
 drivers: everything upstream selects purely via ``FederationSpec.engine``.
@@ -90,15 +93,18 @@ def available_engines() -> tuple[str, ...]:
 def resolve_engine(spec: FederationSpec) -> str:
     """Map ``engine="auto"`` to a concrete engine for this process.
 
+    The decision table lives in :mod:`repro.mesh.placement`: mesh_2d when
+    the spec's ``replica_bytes`` footprint hint exceeds the per-device
+    budget (a whole replica cannot fit, so the model axis must shard);
     shard_map when >1 device can each own a whole client block; otherwise
-    the vmap GSPMD engine.
+    the vmap GSPMD engine. Adversarial specs never place onto mesh_2d.
     """
     if spec.engine != "auto":
         return spec.engine
-    n_dev = len(jax.devices())
-    if n_dev > 1 and _n_client_shards(spec.n_clients, n_dev) > 1:
-        return "shard_map"
-    return "vmap"
+    from repro.mesh.placement import choose_engine
+    return choose_engine(spec.n_clients, len(jax.devices()),
+                         replica_bytes=spec.replica_bytes,
+                         adversarial=spec.is_adversarial())
 
 
 def get_engine(name_or_spec: str | FederationSpec) -> RoundEngine:
@@ -167,6 +173,27 @@ def build_shard_map_engine(spec: FederationSpec) -> RoundFn:
                                 spec.fl_config(vmap_clients=True), mesh,
                                 topology=spec.topology,
                                 pipeline=spec.aggregation_pipeline())
+
+
+@register_engine("mesh_2d")
+def build_mesh_2d_engine(spec: FederationSpec) -> RoundFn:
+    """2D client x model plane (repro.mesh): clients block over the manual
+    "client" mesh axis, model tensors shard 1/dm over the GSPMD-controlled
+    "model" axis. Mesh shape comes from the spec or the placement default
+    (which reads the ``replica_bytes`` footprint hint); clients that do not
+    divide the client axis are padded inside the engine."""
+    from repro.launch.mesh import make_mesh_2d
+    from repro.mesh.engine import make_mesh_2d_round
+    from repro.mesh.placement import default_mesh_shape
+    shape = spec.mesh_shape or default_mesh_shape(
+        spec.n_clients, len(jax.devices()),
+        replica_bytes=spec.replica_bytes)
+    mesh = make_mesh_2d(shape)
+    rules = dict(spec.sharding_rules) if spec.sharding_rules else None
+    return make_mesh_2d_round(spec.loss_fn, spec.optimizer,
+                              spec.fl_config(vmap_clients=True), mesh,
+                              rules=rules, topology=spec.topology,
+                              pipeline=spec.aggregation_pipeline())
 
 
 # compiled-round caches: keyed on the engine-relevant slice of the spec, so

@@ -25,7 +25,7 @@ from repro.core.fl import TOPOLOGIES, Budgets, FLConfig, design_sigmas
 from repro.kernels.dispatch import KERNEL_BACKENDS
 from repro.optim.optimizers import Optimizer
 
-ENGINES = ("vmap", "map", "shard_map", "async_buffered", "auto")
+ENGINES = ("vmap", "map", "shard_map", "mesh_2d", "async_buffered", "auto")
 
 
 @dataclass(frozen=True)
@@ -48,6 +48,12 @@ class FederationSpec:
     #   updates and redispatches immediately — driven by
     #   ``repro.asyncfl.train_async``, NOT by run_round/train (which raise
     #   for it). "auto" never resolves to it: async is always explicit.
+    #   "mesh_2d" is the 2D client x model plane (repro.mesh): clients
+    #   block over the mesh "client" axis exactly as under "shard_map",
+    #   while model tensors shard 1/dm over the GSPMD-controlled "model"
+    #   axis — the engine for replicas too big for one device. "auto"
+    #   resolves to it when ``replica_bytes`` exceeds the per-device budget
+    #   (repro.mesh.placement).
     kernel_backend: str = "auto"    # clip+noise kernel backend
     #   ("pallas" | "interpret" | "ref" | "auto"): every engine's Eq.-7a
     #   clip+noise step runs through kernels.dispatch get_kernel(
@@ -119,6 +125,21 @@ class FederationSpec:
     #   equal it (the one device-block size there is). Accounting-only
     #   like ``population``: M is NOT part of engine_key(), so population
     #   sweeps at fixed K reuse one compiled round.
+
+    # -- 2D mesh plane (repro.mesh; engine="mesh_2d" or "auto") ------------
+    mesh_shape: tuple[int, int] | None = None  # (dc, dm) client blocks x
+    #   model shards over the local devices; None -> repro.mesh.placement
+    #   .default_mesh_shape (all devices to client blocks unless
+    #   ``replica_bytes`` forces a model axis). Part of engine_key(): the
+    #   shape is the compiled collective layout.
+    sharding_rules: Any = None      # logical->mesh axis overrides for the
+    #   model annotations inside the mesh_2d body (dict or (name, axis)
+    #   pairs; normalized to a sorted tuple of pairs so specs stay
+    #   hashable). None -> repro.models.sharding.mesh2d_rules().
+    replica_bytes: int | None = None  # per-replica params+opt-state
+    #   footprint hint (repro.configs.shapes.replica_footprint_bytes) that
+    #   drives the mesh-aware engine="auto" placement: over the per-device
+    #   budget -> "mesh_2d". None -> placement never picks mesh_2d.
 
     # -- buffered-async federation (repro.asyncfl; engine="async_buffered")
     buffer_size: int | None = None  # B: arrivals aggregated per flush.
@@ -253,6 +274,40 @@ class FederationSpec:
         if self.staleness_alpha < 0.0:
             raise ValueError(f"staleness_alpha must be >= 0, "
                              f"got {self.staleness_alpha}")
+        if self.engine not in ("mesh_2d", "auto"):
+            if self.mesh_shape is not None:
+                raise ValueError("mesh_shape only applies to "
+                                 "engine='mesh_2d' (or 'auto', which may "
+                                 "resolve to it)")
+            if self.sharding_rules is not None:
+                raise ValueError("sharding_rules only apply to "
+                                 "engine='mesh_2d' (or 'auto')")
+        if self.mesh_shape is not None:
+            ms = tuple(int(x) for x in self.mesh_shape)
+            if len(ms) != 2 or ms[0] < 1 or ms[1] < 1:
+                raise ValueError(f"mesh_shape must be two positive ints "
+                                 f"(dc, dm), got {self.mesh_shape!r}")
+            object.__setattr__(self, "mesh_shape", ms)
+        if self.sharding_rules is not None:
+            items = (self.sharding_rules.items()
+                     if isinstance(self.sharding_rules, dict)
+                     else self.sharding_rules)
+            norm = tuple(sorted(
+                (str(k), tuple(v) if isinstance(v, (list, tuple)) else v)
+                for k, v in items))
+            object.__setattr__(self, "sharding_rules", norm)
+        if self.replica_bytes is not None:
+            if int(self.replica_bytes) <= 0:
+                raise ValueError(f"replica_bytes must be positive, "
+                                 f"got {self.replica_bytes}")
+            object.__setattr__(self, "replica_bytes", int(self.replica_bytes))
+        if self.engine == "mesh_2d" and self.is_adversarial():
+            raise ValueError(
+                "engine='mesh_2d' does not support the adversarial "
+                "extensions (robust aggregator / secure sum / update "
+                "attack): their full-view reductions gather exactly "
+                "n_clients rows and do not compose with the padded client "
+                "axis. Use engine='shard_map'")
         if self.cohort_size is not None and self.population is None:
             raise ValueError("cohort_size only makes sense with a "
                              "population (FederationSpec(population=M))")
@@ -508,6 +563,11 @@ class FederationSpec:
                 # async: B shapes the flush/dispatch blocks; staleness_alpha
                 # deliberately excluded (a runtime weight operand)
                 self.buffer_size,
+                # 2D mesh plane: the mesh shape and logical rules ARE the
+                # compiled layout; replica_bytes steers what engine="auto"
+                # resolves to, so it must key the cache even though the
+                # resolved engine ignores it
+                self.mesh_shape, self.sharding_rules, self.replica_bytes,
                 # adversarial fleets (PR 7)
                 self.aggregator, self.trim_fraction, self.norm_bound_factor,
                 (self.participants_per_round()

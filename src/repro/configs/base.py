@@ -69,6 +69,12 @@ class ArchConfig:
     tie_head: bool = True
     dtype: str = "bfloat16"
     remat: bool = True
+    # fully unroll the layer/loss-chunk scans (straight-line HLO). Required
+    # inside the mesh_2d partial-auto shard_map region, where XLA's SPMD
+    # partitioner cannot propagate manual-subgroup shardings into while
+    # loops (hlo_sharding_util IsManualSubgroup check). Numerics identical;
+    # compile time grows with depth, so keep False everywhere else.
+    scan_unroll: bool = False
     block_q: int = 512
     loss_chunk: int = 0        # 0 = unchunked cross-entropy (hillclimb knob)
     embed_impl: str = "gather"  # "gather" | "one_hot" (§Perf knob)

@@ -50,6 +50,34 @@ def _sds(shape, dtype):
     return jax.ShapeDtypeStruct(shape, dtype)
 
 
+def param_count_estimate(cfg: ArchConfig) -> int:
+    """Parameter count of one model replica, via ``jax.eval_shape`` on the
+    arch's init (abstract — no allocation, no devices needed)."""
+    from repro.models.transformer import Transformer
+    model = Transformer(cfg)
+    params_sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    return sum(int(x.size) for x in jax.tree.leaves(params_sds))
+
+
+def replica_footprint_bytes(cfg: ArchConfig, optimizer=None) -> int:
+    """Bytes of ONE client replica: params + optimizer state, from abstract
+    shapes. This is the ``FederationSpec.replica_bytes`` hint that drives
+    the mesh-aware ``engine="auto"`` placement (repro.mesh.placement) and
+    the per-device budget report of ``launch/dryrun --mesh-report``.
+    Activations / gradients are excluded — the placement compares this
+    against the per-device budget with the same margin conventions as
+    ``launch.dryrun`` (which reports them separately).
+    """
+    from repro.models.transformer import Transformer
+    model = Transformer(cfg)
+    params_sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    leaves = list(jax.tree.leaves(params_sds))
+    if optimizer is not None:
+        opt_sds = jax.eval_shape(optimizer.init, params_sds)
+        leaves += list(jax.tree.leaves(opt_sds))
+    return sum(int(x.size) * x.dtype.itemsize for x in leaves)
+
+
 def input_specs(cfg: ArchConfig, shape: InputShape, n_clients: int = 1,
                 tau: int = 1, dtype=jnp.bfloat16):
     """ShapeDtypeStruct stand-ins for every model input (no allocation).

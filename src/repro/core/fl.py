@@ -68,12 +68,20 @@ def make_grad_fn(loss_fn: Callable, cfg: FLConfig) -> Callable:
     return make_plain_grad_fn(loss_fn)
 
 
-def make_local_round(grad_fn: Callable, optimizer: Optimizer, tau: int):
+def make_local_round(grad_fn: Callable, optimizer: Optimizer, tau: int,
+                     unroll: int | bool = 1):
     """tau local DP-SGD steps of ONE client (Eq. 7a). No collectives.
 
     Returns ``local_round(params, opt_state, batches, key, sigma)`` ->
     ``(params, opt_state, metrics)`` with metrics averaged over the tau steps.
-    Shared by the GSPMD/vmap engines here and the shard_map engine.
+    Shared by the GSPMD/vmap engines here and the shard_map engines.
+
+    ``unroll`` passes through to the tau scan — numerics are identical at
+    any value. The mesh_2d engine builds with ``unroll=True`` (fully
+    unrolled): on current jax/XLA the threefry custom partitioner aborts
+    when RNG sits inside a while loop inside a partial-manual shard_map
+    region (``Check failed: sharding.IsManualSubgroup()``), and unrolling
+    removes the while loop without touching the values.
     """
     def local_round(params, opt_state, batches, key, sigma):
         keys = jax.random.split(key, tau)
@@ -86,10 +94,31 @@ def make_local_round(grad_fn: Callable, optimizer: Optimizer, tau: int):
             return (tree_add(p, upd), s), metrics
 
         (params, opt_state), ms = jax.lax.scan(step, (params, opt_state),
-                                               (batches, keys))
+                                               (batches, keys),
+                                               unroll=unroll)
         return params, opt_state, jax.tree.map(jnp.mean, ms)
 
     return local_round
+
+
+def tree_valid_mean_axis0(tree, valid, denom, all_sum=lambda x: x):
+    """Mean over axis 0 of every leaf, weighted by the 0/1 ``valid`` vector
+    and normalized by the (possibly cross-shard) ``denom`` count.
+
+    The padded-client Eq.-7b boundary of the mesh_2d engine (repro.mesh):
+    when C clients do not divide the client-block mesh axis, blocks are
+    padded to Cp rows and pad rows carry ``valid = 0`` — this weighted form
+    with ``denom = all_sum(sum(valid))`` reproduces the exact mean over the
+    C real clients. Sums run in f32 and cast back per leaf (int leaves such
+    as optimizer step counters round-trip exactly — weighted means of
+    identical integers are integral). ``all_sum`` closes the cross-shard
+    reduction, ``lax.psum`` over the client axis under shard_map."""
+    def one(x):
+        v = valid.reshape((-1,) + (1,) * (x.ndim - 1))
+        s = all_sum(jnp.sum(v * x.astype(jnp.float32), axis=0))
+        return (s / denom).astype(x.dtype)
+
+    return jax.tree.map(one, tree)
 
 
 def pipeline_round_keys(key, n_clients: int):

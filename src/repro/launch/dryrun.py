@@ -2,9 +2,17 @@ import os
 import sys as _sys
 # only effective before jax initializes (the intended `python -m` entry);
 # when imported into a live process (tests), mutating XLA_FLAGS would do
-# nothing for jax and only pollute the env for later readers
-if "jax" not in _sys.modules:
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# nothing for jax and only pollute the env for later readers. Skipped when
+# the user steers the device count themselves via --env-profile/--host-devices
+# (repro.launch.env re-exec) or an explicit XLA_FLAGS — never clobber those.
+if ("jax" not in _sys.modules
+        and os.environ.get("REPRO_ENV_PROFILE_APPLIED") != "1"
+        and "--env-profile" not in _sys.argv
+        and "--xla_force_host_platform_device_count"
+            not in os.environ.get("XLA_FLAGS", "")):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               " --xla_force_host_platform_device_count=512"
+                               ).strip()
 
 """Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
 combination against the production mesh, and extract the roofline terms
@@ -249,6 +257,67 @@ def _needs_param_sharding(params_sds, serve_mesh) -> bool:
 
 
 # ---------------------------------------------------------------------------
+# mesh placement report (repro.mesh plane)
+# ---------------------------------------------------------------------------
+
+
+def mesh_report(archs, n_clients: int, n_devices: int,
+                device_mem_bytes: int | None = None) -> list[dict]:
+    """Per-arch 2D-mesh placement audit: one client replica's param +
+    opt-state bytes (abstract, from ``configs.shapes.replica_footprint_bytes``)
+    against the per-device budget under the mesh ``repro.mesh.placement``
+    would choose — the static answer to "does engine='auto' pick mesh_2d
+    here, and does each model shard actually fit?".
+    """
+    from repro.configs.shapes import replica_footprint_bytes
+    from repro.mesh.placement import (
+        choose_engine,
+        default_mesh_shape,
+        device_memory_budget,
+    )
+    from repro.optim import sgd
+
+    budget = device_memory_budget(default=device_mem_bytes)
+    opt = sgd(0.1)
+    rows = []
+    for arch in archs:
+        cfg = get_arch(arch)
+        replica = replica_footprint_bytes(cfg, optimizer=opt)
+        engine = choose_engine(n_clients, n_devices, replica_bytes=replica,
+                               hbm_bytes=budget)
+        dc, dm = default_mesh_shape(n_clients, n_devices,
+                                    replica_bytes=replica, hbm_bytes=budget)
+        per_device = -(-replica // dm)    # ceil: largest model shard
+        rows.append({
+            "arch": arch,
+            "replica_bytes": int(replica),
+            "engine": engine,
+            "mesh_shape": [dc, dm],
+            "per_device_bytes": int(per_device),
+            "budget_bytes": int(budget),
+            "fits": bool(per_device <= budget),
+            "n_clients": n_clients,
+            "n_devices": n_devices,
+        })
+    return rows
+
+
+def print_mesh_report(rows) -> None:
+    hdr = (f"{'arch':<22} {'replica':>10} {'engine':>10} {'mesh':>7} "
+           f"{'per-dev':>10} {'budget':>10} fits")
+    print(hdr)
+    print("-" * len(hdr))
+    gib = 1024 ** 3
+    for r in rows:
+        dc, dm = r["mesh_shape"]
+        print(f"{r['arch']:<22} {r['replica_bytes'] / gib:>9.2f}G "
+              f"{r['engine']:>10} {dc:>3}x{dm:<3} "
+              f"{r['per_device_bytes'] / gib:>9.2f}G "
+              f"{r['budget_bytes'] / gib:>9.2f}G "
+              f"{'yes' if r['fits'] else 'NO'}")
+
+
+# ---------------------------------------------------------------------------
 # run + report
 # ---------------------------------------------------------------------------
 
@@ -373,9 +442,33 @@ def main(argv=None):
                     help="suffix for output json (e.g. _opt)")
     ap.add_argument("--lower-only", action="store_true")
     ap.add_argument("--out-dir", default="experiments/dryrun")
+    ap.add_argument("--mesh-report", action="store_true",
+                    help="report per-device param+opt-state bytes for each "
+                         "arch under the 2D mesh engine='auto' would pick "
+                         "(repro.mesh.placement), instead of lowering")
+    ap.add_argument("--device-mem-gb", type=float, default=None,
+                    help="per-device HBM budget in GiB for --mesh-report "
+                         "(default: REPRO_DEVICE_MEM_BYTES env or 16 GiB)")
+    from repro.launch.env import add_env_profile_args, apply_env_profile
+    add_env_profile_args(ap)
     args = ap.parse_args(argv)
+    apply_env_profile(args.env_profile, host_devices=args.host_devices)
 
     os.makedirs(args.out_dir, exist_ok=True)
+
+    if args.mesh_report:
+        archs = [args.arch] if args.arch else list(ASSIGNED_ARCHS)
+        mem = (int(args.device_mem_gb * 1024 ** 3)
+               if args.device_mem_gb else None)
+        rows = mesh_report(archs, n_clients=args.clients or 8,
+                           n_devices=len(jax.devices()),
+                           device_mem_bytes=mem)
+        print_mesh_report(rows)
+        out = os.path.join(args.out_dir, "mesh_report.json")
+        with open(out, "w") as f:
+            json.dump(rows, f, indent=2)
+        print(f"wrote {out}")
+        return 0 if all(r["fits"] for r in rows) else 1
     combos = ([(a, s) for a in ASSIGNED_ARCHS
                for s in ("train_4k", "prefill_32k", "decode_32k",
                          "long_500k")]

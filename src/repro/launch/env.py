@@ -101,6 +101,22 @@ def profile_env(profile: str, *, host_devices: int = 1,
     return env
 
 
+def add_env_profile_args(ap) -> None:
+    """Attach the shared ``--env-profile`` / ``--host-devices`` flags to an
+    argparse parser. Every launcher (train, serve, dryrun) exposes the same
+    pair so a cpu-mesh invocation looks identical across entry points:
+
+        python -m repro.launch.<any> --env-profile cpu-mesh --host-devices 8
+    """
+    ap.add_argument("--env-profile", default="none", choices=ENV_PROFILES,
+                    help="re-exec under a tuned launch environment "
+                         "(allocator + XLA host flags); 'cpu-mesh' splits "
+                         "the host CPU into --host-devices XLA devices")
+    ap.add_argument("--host-devices", type=int, default=1,
+                    help="XLA host device count for the 'cpu-mesh' env "
+                         "profile")
+
+
 def apply_env_profile(profile: str | None, *,
                       host_devices: int = 1) -> bool:
     """Re-exec the current process under ``profile``'s environment.

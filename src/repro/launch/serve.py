@@ -174,14 +174,9 @@ def main(argv=None):
     ap.add_argument("--fl-checkpoint", default=None,
                     help="serve the aggregated model of a repro.api "
                          "save_state checkpoint instead of random init")
-    ap.add_argument("--env-profile", default="none",
-                    help="re-exec under a tuned host environment "
-                         "(repro.launch.env: 'host' or 'cpu-mesh')")
-    ap.add_argument("--host-devices", type=int, default=1,
-                    help="XLA host-platform device count of the cpu-mesh "
-                         "env profile")
+    from repro.launch.env import add_env_profile_args, apply_env_profile
+    add_env_profile_args(ap)
     args = ap.parse_args(argv)
-    from repro.launch.env import apply_env_profile
     apply_env_profile(args.env_profile, host_devices=args.host_devices)
 
     cfg = get_arch(args.arch)

@@ -53,7 +53,7 @@ from repro.asyncfl import (
     train_async,
 )
 from repro.configs import get_arch, smoke_variant
-from repro.launch.env import ENV_PROFILES, apply_env_profile
+from repro.launch.env import add_env_profile_args, apply_env_profile
 from repro.population import (
     HeterogeneousCohort,
     init_population_state,
@@ -84,6 +84,8 @@ def build_federation(cfg, n_clients: int, tau: int, batch_size: int,
                      dp_accounting: str = "local", attack: str = "none",
                      byzantine_fraction: float = 0.0,
                      attack_scale: float = 10.0,
+                     mesh_shape: tuple[int, int] | None = None,
+                     replica_bytes: int | None = None,
                      rng=None):
     """Assemble the repro.api handles for a transformer federation.
 
@@ -129,6 +131,7 @@ def build_federation(cfg, n_clients: int, tau: int, batch_size: int,
         buffer_size=buffer_size if engine == "async_buffered" else None,
         staleness_alpha=(staleness_alpha if engine == "async_buffered"
                          else 0.0),
+        mesh_shape=mesh_shape, replica_bytes=replica_bytes,
         sigmas=tuple(float(s) for s in np.asarray(sigmas)),
         batch_sizes=(batch_size,) * n_clients, delta=delta, seed=seed)
     if population:
@@ -177,8 +180,17 @@ def main(argv=None):
     ap.add_argument("--c1", type=float, default=100.0)
     ap.add_argument("--c2", type=float, default=1.0)
     ap.add_argument("--engine", default="auto",
-                    choices=("vmap", "map", "shard_map", "async_buffered",
-                             "auto"))
+                    choices=("vmap", "map", "shard_map", "mesh_2d",
+                             "async_buffered", "auto"))
+    ap.add_argument("--mesh-shape", default=None,
+                    help="dc,dm devices for the mesh_2d engine (client x "
+                         "model axes), e.g. 4,2; default: "
+                         "repro.mesh.placement.default_mesh_shape")
+    ap.add_argument("--replica-hint", action="store_true",
+                    help="pass the arch's abstract param+opt-state bytes "
+                         "(configs.shapes.replica_footprint_bytes) to the "
+                         "spec so engine='auto' can pick mesh_2d when one "
+                         "replica exceeds per-device memory")
     ap.add_argument("--async-buffer", type=int, default=0,
                     help="B > 0 switches to buffered-async federation "
                          "(repro.asyncfl): aggregate the first B arrivals "
@@ -194,13 +206,7 @@ def main(argv=None):
     ap.add_argument("--staleness-alpha", type=float, default=0.0,
                     help="staleness damping w(s) = 1/(1+s)^alpha applied "
                          "to late arrivals at the flush")
-    ap.add_argument("--env-profile", default="none", choices=ENV_PROFILES,
-                    help="re-exec under a tuned host environment "
-                         "(tcmalloc preload, XLA host flags — see "
-                         "repro.launch.env)")
-    ap.add_argument("--host-devices", type=int, default=1,
-                    help="XLA host-platform device count of the cpu-mesh "
-                         "env profile")
+    add_env_profile_args(ap)
     ap.add_argument("--chunk-rounds", type=int, default=1,
                     help="fuse this many rounds into one jitted lax.scan "
                          "dispatch (repro.api.run_rounds): >1 makes the hot "
@@ -309,10 +315,27 @@ def main(argv=None):
                                      fleet=n_resident,
                                      scale=args.latency_scale)
                      if is_async else None)
+    mesh_shape = None
+    if args.mesh_shape:
+        dc, dm = (int(x) for x in args.mesh_shape.split(","))
+        mesh_shape = (dc, dm)
+    if engine == "mesh_2d" and (mesh_shape is None or mesh_shape[1] > 1):
+        # model-sharded region: XLA's partial-auto partitioner can't handle
+        # while loops, so the layer scans must lower as straight-line HLO
+        from dataclasses import replace as _replace
+        cfg = _replace(cfg, scan_unroll=True)
+    replica_bytes = None
+    if args.replica_hint:
+        from repro.configs.shapes import replica_footprint_bytes
+        replica_bytes = replica_footprint_bytes(cfg, optimizer=sgd(args.lr))
+        print(f"[mesh] replica footprint "
+              f"{replica_bytes / 1024 ** 3:.2f} GiB (params + opt state)")
+
     rng = np.random.default_rng(0)
     model, spec, state, sampler = build_federation(
         cfg, n_resident, tau, args.batch, args.seq, sigmas, lr=args.lr,
         clip_norm=args.clip, delta=args.delta, engine=engine,
+        mesh_shape=mesh_shape, replica_bytes=replica_bytes,
         participation=args.participation, compressor=args.compressor,
         compression_ratio=args.compress_ratio,
         compression_bits=args.compress_bits, population=args.population,

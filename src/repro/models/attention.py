@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.layers import _dense_init, apply_rope, rope_angles
+from repro.models.scan_utils import maybe_map
 from repro.models.sharding import shard_hint
 
 NEG_INF = -1e30
@@ -85,7 +86,8 @@ def _sdpa(q, k, v, mask):
 
 
 def blocked_causal_attention(q, k, v, *, window: int = 0, block_q: int = 512,
-                             q_start: int = 0, causal_buckets: bool = False):
+                             q_start: int = 0, causal_buckets: bool = False,
+                             unroll: bool = False):
     """Causal (optionally sliding-window) attention, tiled over q blocks.
 
     window == 0 -> full causal. window == W -> attend to the last W positions
@@ -97,7 +99,8 @@ def blocked_causal_attention(q, k, v, *, window: int = 0, block_q: int = 512,
     with fully static shapes (§Perf optimization).
     """
     if causal_buckets and not window and q_start == 0:
-        return _bucketed_causal_attention(q, k, v, block_q=block_q)
+        return _bucketed_causal_attention(q, k, v, block_q=block_q,
+                                          unroll=unroll)
     b, sq, h, hd = q.shape
     skv = k.shape[1]
     bq = min(block_q, sq)
@@ -131,12 +134,13 @@ def blocked_causal_attention(q, k, v, *, window: int = 0, block_q: int = 512,
         mask = mask[None, None, None]
         return _sdpa(qb, kb, vb, mask)
 
-    out = jax.lax.map(one_block, jnp.arange(n_blocks))     # (nb, B, bq, H, hd)
+    out = maybe_map(one_block, jnp.arange(n_blocks), unroll)  # (nb,B,bq,H,hd)
     out = jnp.moveaxis(out, 0, 1).reshape(b, n_blocks * bq, h, hd)
     return out[:, :sq]
 
 
-def _bucketed_causal_attention(q, k, v, *, block_q: int):
+def _bucketed_causal_attention(q, k, v, *, block_q: int,
+                               unroll: bool = False):
     """Causal attention with power-of-two kv buckets (static shapes).
 
     q block i needs kv[0 : (i+1) * bq]. Blocks with i+1 in (2^b/2, 2^b] share
@@ -166,14 +170,14 @@ def _bucketed_causal_attention(q, k, v, *, block_q: int):
             return _sdpa(qb, kb, vb, mask)
 
         one_block = jax.checkpoint(one_block)
-        out = jax.lax.map(one_block, jnp.arange(count))
+        out = maybe_map(one_block, jnp.arange(count), unroll)
         outs.append(jnp.moveaxis(out, 0, 1).reshape(b, count * bq, h, hd))
         start += count
         span *= 2
     return jnp.concatenate(outs, axis=1)
 
 
-def chunked_causal_attention(q, k, v, chunk: int):
+def chunked_causal_attention(q, k, v, chunk: int, unroll: bool = False):
     """Llama4-style chunked attention: tokens attend causally only within
     their own chunk. O(S * chunk)."""
     b, s, h, hd = q.shape
@@ -195,40 +199,43 @@ def chunked_causal_attention(q, k, v, chunk: int):
     qc = jnp.moveaxis(q.reshape(b, n, chunk, h, hd), 1, 0)
     kc = jnp.moveaxis(k.reshape(b, n, chunk, kv_h, hd), 1, 0)
     vc = jnp.moveaxis(v.reshape(b, n, chunk, kv_h, hd), 1, 0)
-    out = jax.lax.map(per_chunk, (qc, kc, vc))
+    out = maybe_map(per_chunk, (qc, kc, vc), unroll)
     return jnp.moveaxis(out, 0, 1).reshape(b, s, h, hd)
 
 
 def attention_forward(params, x, positions, *, kind: str = "full",
                       window: int = 0, chunk: int = 0, use_rope: bool = True,
                       rope_theta: float = 1e4, block_q: int = 512,
-                      causal_buckets: bool = False):
+                      causal_buckets: bool = False, unroll: bool = False):
     """Full-sequence attention (train / prefill). Returns (B, S, d)."""
     out, _ = attention_forward_kv(
         params, x, positions, kind=kind, window=window, chunk=chunk,
         use_rope=use_rope, rope_theta=rope_theta, block_q=block_q,
-        causal_buckets=causal_buckets)
+        causal_buckets=causal_buckets, unroll=unroll)
     return out
 
 
 def attention_forward_kv(params, x, positions, *, kind: str = "full",
                          window: int = 0, chunk: int = 0,
                          use_rope: bool = True, rope_theta: float = 1e4,
-                         block_q: int = 512, causal_buckets: bool = False):
+                         block_q: int = 512, causal_buckets: bool = False,
+                         unroll: bool = False):
     """Like attention_forward but also returns the (k, v) pair for prefill
     cache construction."""
     q, k, v = _project_qkv(params, x, positions, use_rope, rope_theta)
     if kind == "full":
         ctxv = blocked_causal_attention(q, k, v, window=0, block_q=block_q,
-                                        causal_buckets=causal_buckets)
+                                        causal_buckets=causal_buckets,
+                                        unroll=unroll)
     elif kind == "swa":
         ctxv = blocked_causal_attention(q, k, v, window=window,
-                                        block_q=block_q)
+                                        block_q=block_q, unroll=unroll)
     elif kind == "chunk":
-        ctxv = chunked_causal_attention(q, k, v, chunk=chunk)
+        ctxv = chunked_causal_attention(q, k, v, chunk=chunk, unroll=unroll)
     else:
         raise ValueError(f"unknown attention kind {kind}")
-    out = jnp.einsum("bshk,hkd->bsd", ctxv, params["wo"])
+    wo = shard_hint(params["wo"], "tp", None, "fsdp")
+    out = jnp.einsum("bshk,hkd->bsd", ctxv, wo)
     return shard_hint(out, "batch", "seq", None), (k, v)
 
 
@@ -324,7 +331,8 @@ def paged_decode_attention(params, x, cache, table, pos, *,
         valid &= p[None, :] >= (pos[:, None] // chunk) * chunk
     mask = valid[:, None, None, None, :]
     ctxv = _sdpa(q, kb, vb, mask)
-    out = jnp.einsum("bshk,hkd->bsd", ctxv, params["wo"])
+    wo = shard_hint(params["wo"], "tp", None, "fsdp")
+    out = jnp.einsum("bshk,hkd->bsd", ctxv, wo)
     return shard_hint(out, "batch", "seq", None), {"k": ck, "v": cv}
 
 
@@ -352,5 +360,6 @@ def decode_attention(params, x, cache, pos, *, kind: str = "full",
         valid &= entry_pos >= (pos // chunk) * chunk
     mask = valid[None, None, None, None, :]
     ctxv = _sdpa(q, ck, cv, mask)
-    out = jnp.einsum("bshk,hkd->bsd", ctxv, params["wo"])
+    wo = shard_hint(params["wo"], "tp", None, "fsdp")
+    out = jnp.einsum("bshk,hkd->bsd", ctxv, wo)
     return shard_hint(out, "batch", "seq", None), {"k": ck, "v": cv}

@@ -7,6 +7,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models.sharding import shard_hint
+
 
 def init_linear(dim: int, n_classes: int = 2, seed: int = 0):
     rng = np.random.default_rng(seed)
@@ -18,7 +20,10 @@ def init_linear(dim: int, n_classes: int = 2, seed: int = 0):
 
 
 def logits(params, x):
-    return x @ params["w"] + params["b"]
+    # "fsdp" resolves to the 2D mesh's "model" axis under mesh2d_rules();
+    # identity outside an axis_rules() context, so vmap/map paths see no-op.
+    w = shard_hint(params["w"], "fsdp", "tp")
+    return x @ w + params["b"]
 
 
 def logreg_loss(params, batch, l2: float = 1e-4):

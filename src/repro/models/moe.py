@@ -47,17 +47,38 @@ def init_moe(key, d_model: int, d_ff: int, n_experts: int, top_k: int,
 
 def _expert_ffn(params, xe):
     """xe (E, C, d) -> (E, C, d), batched over experts."""
-    h = jnp.einsum("ecd,edf->ecf", xe, params["w_gate"])
-    u = jnp.einsum("ecd,edf->ecf", xe, params["w_up"])
+    w_gate = shard_hint(params["w_gate"], "tp", "fsdp", None)
+    w_up = shard_hint(params["w_up"], "tp", "fsdp", None)
+    w_down = shard_hint(params["w_down"], "tp", None, "fsdp")
+    h = jnp.einsum("ecd,edf->ecf", xe, w_gate)
+    u = jnp.einsum("ecd,edf->ecf", xe, w_up)
     h = jax.nn.silu(h.astype(jnp.float32)).astype(xe.dtype) * u
-    return jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+    return jnp.einsum("ecf,efd->ecd", h, w_down)
 
 
-def _route(params, x, top_k: int):
+def _iterative_top_k(probs, k):
+    """top_k via k argmax passes — no sort/top_k primitive. XLA's partial-auto
+    SPMD partitioner (mesh_2d engine region) aborts on sort-family HLOs, so
+    the routed path swaps this in when ArchConfig.scan_unroll is set. Ties
+    resolve to the lowest index, matching jax.lax.top_k."""
+    masked = probs
+    vals, ids = [], []
+    for _ in range(k):
+        v = jnp.max(masked, axis=-1)
+        i = jnp.argmax(masked, axis=-1)
+        vals.append(v)
+        ids.append(i)
+        masked = jnp.where(jax.nn.one_hot(i, probs.shape[-1], dtype=bool),
+                           -jnp.inf, masked)
+    return jnp.stack(vals, axis=-1), jnp.stack(ids, axis=-1)
+
+
+def _route(params, x, top_k: int, iterative_topk: bool = False):
     """x (T, d) -> weights (T, K), ids (T, K), aux losses."""
     logits = jnp.einsum("td,de->te", x.astype(jnp.float32), params["router"])
     probs = jax.nn.softmax(logits, axis=-1)
-    weights, ids = jax.lax.top_k(probs, top_k)
+    select = _iterative_top_k if iterative_topk else jax.lax.top_k
+    weights, ids = select(probs, top_k)
     weights = weights / jnp.maximum(
         jnp.sum(weights, axis=-1, keepdims=True), 1e-9)
     # switch load-balance loss: E * sum_e f_e * p_e
@@ -84,7 +105,8 @@ def _regroup(x):
     return x
 
 
-def moe_scatter(params, x, *, top_k: int, capacity_factor: float = 1.25):
+def moe_scatter(params, x, *, top_k: int, capacity_factor: float = 1.25,
+                iterative_topk: bool = False):
     """x (B, S, d) -> (y, aux). Scatter/gather dispatch, per group."""
     orig_shape = x.shape
     x = _regroup(x)
@@ -93,7 +115,8 @@ def moe_scatter(params, x, *, top_k: int, capacity_factor: float = 1.25):
     cap = capacity(s, e, top_k, capacity_factor)
 
     def per_row(xr):                                     # xr (S, d)
-        weights, ids, aux = _route(params, xr, top_k)
+        weights, ids, aux = _route(params, xr, top_k,
+                                   iterative_topk=iterative_topk)
         flat_ids = ids.reshape(-1)                       # (S*K,)
         flat_w = weights.reshape(-1)
         # rank of each (token, k) within its expert, in token order
@@ -121,7 +144,8 @@ def moe_scatter(params, x, *, top_k: int, capacity_factor: float = 1.25):
     return y, jnp.mean(aux)
 
 
-def moe_dense(params, x, *, top_k: int, capacity_factor: float = 1.25):
+def moe_dense(params, x, *, top_k: int, capacity_factor: float = 1.25,
+              iterative_topk: bool = False):
     """Reference GShard-style dense-dispatch implementation (oracle)."""
     orig_shape = x.shape
     x = _regroup(x)
@@ -130,7 +154,8 @@ def moe_dense(params, x, *, top_k: int, capacity_factor: float = 1.25):
     cap = capacity(s, e, top_k, capacity_factor)
 
     def per_row(xr):
-        weights, ids, aux = _route(params, xr, top_k)
+        weights, ids, aux = _route(params, xr, top_k,
+                                   iterative_topk=iterative_topk)
         flat_ids = ids.reshape(-1)
         flat_w = weights.reshape(-1)
         oh = jax.nn.one_hot(flat_ids, e, dtype=jnp.int32)
@@ -155,6 +180,7 @@ def moe_dense(params, x, *, top_k: int, capacity_factor: float = 1.25):
 
 
 def moe_apply(params, x, *, top_k: int, capacity_factor: float = 1.25,
-              impl: str = "scatter"):
+              impl: str = "scatter", iterative_topk: bool = False):
     fn = moe_scatter if impl == "scatter" else moe_dense
-    return fn(params, x, top_k=top_k, capacity_factor=capacity_factor)
+    return fn(params, x, top_k=top_k, capacity_factor=capacity_factor,
+              iterative_topk=iterative_topk)

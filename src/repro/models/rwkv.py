@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.layers import _dense_init
+from repro.models.scan_utils import maybe_map, maybe_scan
 from repro.models.sharding import shard_hint
 
 
@@ -75,7 +76,7 @@ def _tm_inputs(params, x, x_prev):
     return r, k, v, g, w, log_decay
 
 
-def wkv6_scan(r, k, v, w, u, s0=None):
+def wkv6_scan(r, k, v, w, u, s0=None, unroll: bool = False):
     """Sequential WKV6 recurrence. r/k/v/w (B,S,H,hd); u (H,hd).
     Returns (y (B,S,H,hd), final state (B,H,hd,hd))."""
     bsz, s, h, hd = r.shape
@@ -90,11 +91,13 @@ def wkv6_scan(r, k, v, w, u, s0=None):
         return new, y
 
     seq = lambda t: jnp.moveaxis(t.astype(jnp.float32), 1, 0)
-    s_final, ys = jax.lax.scan(step, s0, (seq(r), seq(k), seq(v), seq(w)))
+    s_final, ys = maybe_scan(step, s0, (seq(r), seq(k), seq(v), seq(w)),
+                             unroll=unroll)
     return jnp.moveaxis(ys, 0, 1), s_final
 
 
-def wkv6_chunked(r, k, v, log_decay, u, s0=None, chunk: int = 64):
+def wkv6_chunked(r, k, v, log_decay, u, s0=None, chunk: int = 64,
+                 unroll: bool = False):
     """Chunk-parallel WKV6 (fla-style): intra-chunk quadratic form + one
     state read/write per chunk instead of per token. Exact (all exponents
     are <= 0 under the causal mask, so no overflow).
@@ -141,9 +144,9 @@ def wkv6_chunked(r, k, v, log_decay, u, s0=None, chunk: int = 64):
         a = jnp.einsum("bcti,bcsi,bctsi->bcts", rh, kh, jnp.exp(diff))
         return jnp.einsum("bcts,bcsj->bctj", a, vh)
 
-    parts = jax.lax.map(per_block,
-                        (blocked(rc), blocked(kc), blocked(lc),
-                         blocked(lcm1), v_rep))
+    parts = maybe_map(per_block,
+                      (blocked(rc), blocked(kc), blocked(lc),
+                       blocked(lcm1), v_rep), unroll)
     parts = parts.reshape(h, nblk, bsz, nc, chunk, hd).sum(axis=1)
     y_intra = jnp.moveaxis(parts, 0, 3)
 
@@ -163,8 +166,9 @@ def wkv6_chunked(r, k, v, log_decay, u, s0=None, chunk: int = 64):
         return new, carry                           # emit state BEFORE chunk
 
     sw = lambda t: jnp.moveaxis(t, 1, 0)
-    s_final, s_prev = jax.lax.scan(step, s0,
-                                   (sw(chunk_states), sw(chunk_decay)))
+    s_final, s_prev = maybe_scan(step, s0,
+                                 (sw(chunk_states), sw(chunk_decay)),
+                                 unroll=unroll)
     s_prev = jnp.moveaxis(s_prev, 0, 1)             # (B,nc,H,hd,hd)
     y_state = jnp.einsum("bcthi,bchij->bcthj", r_tilde, s_prev)
     y = (y_intra + y_state).reshape(bsz, s, h, hd)
@@ -178,17 +182,20 @@ def _tm_output(params, y, g, d_model):
     var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
     y = y * jax.lax.rsqrt(var + 1e-6) * params["ln_scale"].astype(jnp.float32)
     y = y * jax.nn.silu(g.astype(jnp.float32))
-    out = jnp.einsum("bsf,fd->bsd", y.astype(params["w_o"].dtype), params["w_o"])
+    w_o = shard_hint(params["w_o"], "tp", "fsdp")
+    out = jnp.einsum("bsf,fd->bsd", y.astype(w_o.dtype), w_o)
     return shard_hint(out, "batch", "seq", None)
 
 
-def rwkv6_timemix_forward(params, x, headdim: int = 64, chunk: int = 0):
-    out, _ = rwkv6_timemix_forward_state(params, x, headdim, chunk)
+def rwkv6_timemix_forward(params, x, headdim: int = 64, chunk: int = 0,
+                          unroll: bool = False):
+    out, _ = rwkv6_timemix_forward_state(params, x, headdim, chunk,
+                                         unroll=unroll)
     return out
 
 
 def rwkv6_timemix_forward_state(params, x, headdim: int = 64,
-                                chunk: int = 0):
+                                chunk: int = 0, unroll: bool = False):
     """Full-sequence time-mix that also returns the decode cache.
     chunk == 0 -> per-token lax.scan (baseline); chunk > 0 -> chunk-parallel
     WKV6 (§Perf optimization)."""
@@ -200,10 +207,10 @@ def rwkv6_timemix_forward_state(params, x, headdim: int = 64,
     if chunk:
         y, s_final = wkv6_chunked(heads(r), heads(k), heads(v),
                                   heads(log_decay), params["bonus_u"],
-                                  chunk=chunk)
+                                  chunk=chunk, unroll=unroll)
     else:
         y, s_final = wkv6_scan(heads(r), heads(k), heads(v), heads(w),
-                               params["bonus_u"])
+                               params["bonus_u"], unroll=unroll)
     out = _tm_output(params, y.astype(x.dtype), g, d_model)
     return out, {"wkv": s_final, "tm_last": x[:, -1:]}
 

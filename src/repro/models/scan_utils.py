@@ -1,0 +1,53 @@
+"""Loop-primitive escape hatch for the mesh_2d partial-auto region.
+
+XLA's SPMD partitioner cannot propagate manual-subgroup shardings into
+``while`` loops (``hlo_sharding_util.cc: Check failed:
+sharding.IsManualSubgroup()``), so any ``lax.map``/``lax.scan`` that traces
+inside a ``shard_map(..., auto={"model"})`` region hard-aborts the process
+at compile time — even a single-iteration loop. The mesh_2d engine
+(repro.mesh.engine) therefore requires every model loop to lower as
+straight-line HLO: ``lax.scan`` calls take ``unroll=True`` and ``lax.map``
+calls route through :func:`maybe_map`. ``ArchConfig.scan_unroll`` threads
+the switch; everywhere else the loops stay rolled (compile time scales with
+trip count when unrolled).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def maybe_map(f, xs, unroll: bool = False):
+    """``jax.lax.map(f, xs)``, or the fully unrolled equivalent (Python
+    loop over the leading axis + stack) when ``unroll``. ``xs`` may be any
+    pytree with a common leading dimension; trip count must be static."""
+    if not unroll:
+        return jax.lax.map(f, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    outs = [f(jax.tree.map(lambda t: t[i], xs)) for i in range(n)]
+    return jax.tree.map(lambda *o: jnp.stack(o), *outs)
+
+
+def maybe_scan(f, init, xs, unroll: bool = False):
+    """``jax.lax.scan(f, init, xs)``, or the straight-line equivalent when
+    ``unroll``. A Python loop rather than ``lax.scan(unroll=True)`` because
+    jax keeps the single-iteration ``while`` wrapper for length-1 scans even
+    when fully unrolled — and one iteration is exactly what the reduced
+    smoke configs produce."""
+    if not unroll:
+        return jax.lax.scan(f, init, xs)
+    carry = init
+    ys = []
+    n = jax.tree.leaves(xs)[0].shape[0]
+    for i in range(n):
+        carry, y = f(carry, jax.tree.map(lambda t, i=i: t[i], xs))
+        ys.append(y)
+    if all(y is None for y in ys):
+        return carry, None
+    return carry, jax.tree.map(lambda *o: jnp.stack(o), *ys)
+
+
+def scan_unroll_arg(unroll: bool):
+    """The ``lax.scan(..., unroll=)`` value for an unroll switch. Only safe
+    for scans whose length is always > 1 — see :func:`maybe_scan`."""
+    return True if unroll else 1

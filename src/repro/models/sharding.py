@@ -49,6 +49,21 @@ def train_rules() -> dict[str, Any]:
             "wg": "replica"}
 
 
+def mesh2d_rules() -> dict[str, Any]:
+    """Rules for the 2D ("client", "model") federation mesh (repro.mesh).
+
+    The client axis is MANUAL inside the mesh_2d engine's shard_map body, so
+    no logical name may map to it here — these rules only place the model
+    axes. With a single model axis, "fsdp" and "tp" both map to "model" and
+    :func:`resolve_spec` keeps whichever dim claims it first (a mesh axis
+    may appear at most once per PartitionSpec), so every weight ends up
+    1/dm-sharded along its first shardable logical dim. The "act" rule
+    shards the d_model activation carry, bounding the in-body working set.
+    """
+    return {"client": None, "fsdp": "model", "tp": "model",
+            "batch": None, "seq": None, "act": "model", "wg": None}
+
+
 def serve_rules(fsdp_over_data: bool = False, shard_seq: bool = False) -> dict[str, Any]:
     return {"client": None, "fsdp": "data" if fsdp_over_data else None,
             "tp": "model", "batch": "data",
@@ -69,21 +84,34 @@ def _mesh_axis_size(mesh: Mesh, axis) -> int:
     return mesh.shape[axis]
 
 
+def _atomic_axes(axis) -> tuple:
+    return tuple(axis) if isinstance(axis, (tuple, list)) else (axis,)
+
+
 def resolve_spec(logical: tuple, shape: tuple[int, ...] | None = None) -> P:
     """Translate logical axis names to a PartitionSpec under active rules.
 
     If ``shape`` is given, any mesh axis that does not divide the dim size is
-    dropped (GSPMD would pad; we prefer explicit replication)."""
+    dropped (GSPMD would pad; we prefer explicit replication). A mesh axis
+    claimed by an earlier dim is dropped from later dims (first dim wins):
+    a PartitionSpec may not repeat an axis, and on small meshes several
+    logical names legitimately map to one physical axis (e.g. "fsdp" and
+    "tp" both -> "model" under :func:`mesh2d_rules`)."""
     ctx = _current()
     if ctx is None:
         return P()
     mesh, rules = ctx
     out = []
+    used: set = set()
     for i, name in enumerate(logical):
         axis = rules.get(name) if name is not None else None
+        if axis is not None and any(a in used for a in _atomic_axes(axis)):
+            axis = None
         if axis is not None and shape is not None:
             if shape[i] % _mesh_axis_size(mesh, axis) != 0:
                 axis = None
+        if axis is not None:
+            used.update(_atomic_axes(axis))
         out.append(axis)
     while out and out[-1] is None:
         out.pop()

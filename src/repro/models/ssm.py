@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.layers import _dense_init
+from repro.models.scan_utils import maybe_scan
 from repro.models.sharding import shard_hint
 
 
@@ -69,12 +70,13 @@ def _gated_out(params, y, z, d_model):
     y32 = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
     var = jnp.mean(jnp.square(y32), axis=-1, keepdims=True)
     y32 = y32 * jax.lax.rsqrt(var + 1e-6) * params["norm_scale"].astype(jnp.float32)
-    out = jnp.einsum("bsf,fd->bsd", y32.astype(params["w_out"].dtype),
-                     params["w_out"])
+    w_out = shard_hint(params["w_out"], "tp", "fsdp")
+    out = jnp.einsum("bsf,fd->bsd", y32.astype(w_out.dtype), w_out)
     return shard_hint(out, "batch", "seq", None)
 
 
-def ssd_chunked(x, dt, a, b_in, c_in, chunk: int = 128, h0=None):
+def ssd_chunked(x, dt, a, b_in, c_in, chunk: int = 128, h0=None,
+                unroll: bool = False):
     """Chunked SSD scan.
 
     x (B,S,H,P); dt (B,S,H) (post-softplus); a (H,) negative;
@@ -119,7 +121,8 @@ def ssd_chunked(x, dt, a, b_in, c_in, chunk: int = 128, h0=None):
 
     states = jnp.moveaxis(chunk_state.astype(jnp.float32), 1, 0)
     decays = jnp.moveaxis(chunk_decay, 1, 0)
-    h_final, h_prevs = jax.lax.scan(step, h0, (states, decays))
+    h_final, h_prevs = maybe_scan(step, h0, (states, decays),
+                                  unroll=unroll)
     h_prevs = jnp.moveaxis(h_prevs, 0, 1)                  # (B,nc,H,P,N)
 
     # ---- inter-chunk contribution to outputs ------------------------------
@@ -130,15 +133,16 @@ def ssd_chunked(x, dt, a, b_in, c_in, chunk: int = 128, h0=None):
 
 
 def mamba2_forward(params, x, *, d_state: int, headdim: int, expand: int,
-                   chunk: int = 128):
+                   chunk: int = 128, unroll: bool = False):
     """Full-sequence Mamba2 mixer. x (B,S,d) -> (B,S,d)."""
     out, _ = mamba2_forward_state(params, x, d_state=d_state, headdim=headdim,
-                                  expand=expand, chunk=chunk)
+                                  expand=expand, chunk=chunk, unroll=unroll)
     return out
 
 
 def mamba2_forward_state(params, x, *, d_state: int, headdim: int,
-                         expand: int, chunk: int = 128):
+                         expand: int, chunk: int = 128,
+                         unroll: bool = False):
     """Full-sequence Mamba2 that also returns the decode cache (final SSM
     state + conv window)."""
     d_model = x.shape[-1]
@@ -155,7 +159,8 @@ def mamba2_forward_state(params, x, *, d_state: int, headdim: int,
     bsz, s = x.shape[:2]
     xh = xin.reshape(bsz, s, n_heads, headdim)
     xh = shard_hint(xh, "batch", "seq", "tp", None)
-    y, h_final = ssd_chunked(xh, dt, a, b_in, c_in, chunk=min(chunk, s))
+    y, h_final = ssd_chunked(xh, dt, a, b_in, c_in,
+                             chunk=min(chunk, s), unroll=unroll)
     y = y + params["d_skip"][None, None, :, None] * xh.astype(y.dtype)
     out = _gated_out(params, y.astype(x.dtype), z, d_model)
     cache = {"h": h_final,                          # (B,H,P,N)

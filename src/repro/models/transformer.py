@@ -25,6 +25,7 @@ from repro.models.layers import (
     rmsnorm,
     unembed,
 )
+from repro.models.scan_utils import maybe_scan
 from repro.models.sharding import shard_hint
 
 AUX_WEIGHT = 0.01  # load-balance aux loss weight
@@ -195,23 +196,24 @@ class Transformer:
                 lparams["mixer"], h, positions, kind=spec.attn_kind,
                 window=cfg.window, chunk=cfg.chunk, use_rope=spec.use_rope,
                 rope_theta=cfg.rope_theta, block_q=cfg.block_q,
-                causal_buckets=cfg.causal_buckets)
+                causal_buckets=cfg.causal_buckets, unroll=cfg.scan_unroll)
         if spec.mixer == "shared_attn":
             p = self._merged_shared_attn(lparams["mixer"], shared)
             return attn.attention_forward(
                 p, h, positions, kind=spec.attn_kind, window=cfg.window,
                 chunk=cfg.chunk, use_rope=spec.use_rope,
                 rope_theta=cfg.rope_theta, block_q=cfg.block_q,
-                causal_buckets=cfg.causal_buckets)
+                causal_buckets=cfg.causal_buckets, unroll=cfg.scan_unroll)
         if spec.mixer == "mamba2":
             return ssm_mod.mamba2_forward(
                 lparams["mixer"], h, d_state=cfg.ssm_state,
                 headdim=cfg.ssm_headdim, expand=cfg.ssm_expand,
-                chunk=cfg.ssd_chunk)
+                chunk=cfg.ssd_chunk, unroll=cfg.scan_unroll)
         if spec.mixer == "rwkv6":
             return rwkv_mod.rwkv6_timemix_forward(lparams["mixer"], h,
                                                   cfg.rwkv_headdim,
-                                                  cfg.rwkv_chunk)
+                                                  cfg.rwkv_chunk,
+                                                  unroll=cfg.scan_unroll)
         raise ValueError(spec.mixer)
 
     def _apply_ffn(self, spec: LayerSpec, lparams, shared, h):
@@ -221,7 +223,8 @@ class Transformer:
         if spec.ffn == "moe":
             return moe_mod.moe_apply(
                 lparams["ffn"], h, top_k=cfg.top_k,
-                capacity_factor=cfg.capacity_factor, impl=cfg.moe_impl)
+                capacity_factor=cfg.capacity_factor, impl=cfg.moe_impl,
+                iterative_topk=cfg.scan_unroll)
         if spec.ffn == "rwkv_cm":
             return rwkv_mod.rwkv6_channelmix_forward(lparams["ffn"], h), 0.0
         if spec.ffn == "shared_mlp":
@@ -276,7 +279,8 @@ class Transformer:
                 return (x, aux), None
 
             step_fn = jax.checkpoint(step) if remat else step
-            (x, aux), _ = jax.lax.scan(step_fn, (x, aux), seg_params)
+            (x, aux), _ = maybe_scan(step_fn, (x, aux), seg_params,
+                                     unroll=cfg.scan_unroll)
 
         x = rmsnorm(params["final_norm"], x)
         if prefix is not None:
@@ -310,8 +314,8 @@ class Transformer:
             return carry + cross_entropy(logits, lc) * c, None
 
         chunk_fn = jax.checkpoint(chunk_nll) if cfg.remat else chunk_nll
-        total, _ = jax.lax.scan(chunk_fn, jnp.zeros((), jnp.float32),
-                                (xs, ls))
+        total, _ = maybe_scan(chunk_fn, jnp.zeros((), jnp.float32),
+                              (xs, ls), unroll=cfg.scan_unroll)
         return total / s + AUX_WEIGHT * aux
 
     def _hidden_states(self, params, tokens, prefix):
@@ -329,7 +333,8 @@ class Transformer:
                     aux = aux + a
                 return (x, aux), None
             step_fn = jax.checkpoint(step) if cfg.remat else step
-            (x, aux), _ = jax.lax.scan(step_fn, (x, aux), seg_params)
+            (x, aux), _ = maybe_scan(step_fn, (x, aux), seg_params,
+                                     unroll=cfg.scan_unroll)
         x = rmsnorm(params["final_norm"], x)
         if prefix is not None:
             x = x[:, prefix.shape[1]:]
